@@ -1,0 +1,55 @@
+"""Paper §4.5 implementation-detail ablations (Corollary 5 + scaling).
+
+Measures, on a fixed (K, C):
+  1. P ⊂ S enforcement on/off            (Corollary 5 / §4.5 trick 1)
+  2. scaled vs unscaled leverage rows    (§4.5 trick 2 — stability)
+  3. leverage vs uniform S               (paper: 'not much difference')
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import calibrate_sigma, make_dataset, print_table
+from repro.core import spsd
+from repro.core.kernelop import RBFKernel
+
+
+def run(dataset="pendigit", c=15, s_mult=8, trials=5, seed=0):
+    X, _ = make_dataset(dataset, seed=seed)
+    sigma = calibrate_sigma(X, 0.9, 3)
+    Kop = RBFKernel(X, sigma=sigma)
+    base = spsd.sample_C(Kop, jax.random.PRNGKey(seed), c)
+    s = s_mult * c
+
+    def err(**kw):
+        es = [float(spsd.relative_error(Kop, spsd.fast_model_from_C(
+            Kop, base.C, jax.random.PRNGKey(100 + i), s,
+            P_indices=base.P_indices, **kw))) for i in range(trials)]
+        return float(np.mean(es)), float(np.std(es))
+
+    rows = []
+    for kind in ("uniform", "leverage"):
+        for subset in (True, False):
+            for scale in (False, True):
+                m, sd = err(s_sketch=kind, enforce_subset=subset,
+                            scale=scale)
+                rows.append((kind, "P⊂S" if subset else "indep",
+                             "scaled" if scale else "unscaled",
+                             f"{m:.5f} ± {sd:.5f}"))
+    print_table(f"§4.5 ablations ({dataset}, c={c}, s={s_mult}c)",
+                ["S sketch", "subset", "row scaling", "rel err"], rows)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dataset", default="pendigit")
+    args = p.parse_args(argv)
+    run(args.dataset)
+
+
+if __name__ == "__main__":
+    main()

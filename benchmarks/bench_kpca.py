@@ -1,0 +1,104 @@
+"""Paper Figures 5-10: approximate KPCA.
+
+- misalignment (Eq. 10) of the top-k approximate eigenvectors vs exact,
+  against both c (memory) and wall-time (Figs 5/6);
+- with --knn: KPCA features + 10-NN generalization error (Figs 7-10).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (calibrate_sigma, knn_classify, make_dataset,
+                               print_table)
+from repro.core import eig, spsd
+from repro.core.kernelop import RBFKernel
+
+
+def _methods(Kop, key, c, s_mults=(2, 4, 8)):
+    base = spsd.sample_C(Kop, key, c)
+    out = {}
+    t0 = time.perf_counter()
+    W = Kop.block(base.P_indices, base.P_indices)
+    U = spsd.nystrom_U(W)
+    out["nystrom"] = (base.C, U, time.perf_counter() - t0)
+    for m in s_mults:
+        t0 = time.perf_counter()
+        ap = spsd.fast_model_from_C(Kop, base.C, jax.random.fold_in(key, m),
+                                    m * c, P_indices=base.P_indices,
+                                    s_sketch="uniform")
+        out[f"fast s={m}c"] = (ap.C, ap.U, time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    proto = spsd.prototype_model(Kop, base.C, base.P_indices)
+    out["prototype"] = (proto.C, proto.U, time.perf_counter() - t0)
+    return out
+
+
+def run_misalignment(dataset: str, k: int = 3, cs=(16, 32, 64), seed=0):
+    X, _ = make_dataset(dataset, seed=seed)
+    sigma = calibrate_sigma(X, 0.9, k)
+    Kop = RBFKernel(X, sigma=sigma)
+    Kd = Kop.full()
+    lam, V = jnp.linalg.eigh(Kd)
+    U_true = V[:, ::-1][:, :k]
+
+    rows = []
+    for c in cs:
+        for name, (C, U, dt) in _methods(Kop, jax.random.PRNGKey(seed),
+                                         c).items():
+            res = eig.approx_eigh(C, U, k)
+            mis = float(eig.misalignment(U_true, res.eigenvectors))
+            rows.append((dataset, c, name, f"{dt * 1e3:8.1f}",
+                         f"{mis:.5f}"))
+    print_table(f"Fig 5/6: KPCA misalignment ({dataset}, k={k})",
+                ["dataset", "c", "method", "U-time ms", "misalignment"],
+                rows)
+    return rows
+
+
+def run_knn(dataset: str, k: int = 3, c: int = 48, seed=0):
+    X, y = make_dataset(dataset, seed=seed)
+    n = X.shape[0]
+    ntr = n // 2
+    Xtr, ytr, Xte, yte = X[:ntr], y[:ntr], X[ntr:], y[ntr:]
+    sigma = calibrate_sigma(Xtr, 0.9, k)
+    Kop = RBFKernel(Xtr, sigma=sigma)
+
+    # kernel columns for test points
+    d2 = (jnp.sum(Xte ** 2, 1)[None, :] + jnp.sum(Xtr ** 2, 1)[:, None]
+          - 2 * Xtr @ Xte.T)
+    k_test = jnp.exp(-jnp.maximum(d2, 0) / (2 * sigma ** 2))   # (ntr, nte)
+
+    rows = []
+    for name, (C, U, dt) in _methods(Kop, jax.random.PRNGKey(seed),
+                                     c).items():
+        feats, eres = eig.kpca_features(C, U, k)
+        te_feats = eig.kpca_transform(eres, k_test).T           # (nte, k)
+        pred = knn_classify(np.asarray(feats), ytr, np.asarray(te_feats))
+        err = float(np.mean(pred != np.asarray(yte)))
+        rows.append((dataset, name, f"{dt * 1e3:8.1f}", f"{err:.4f}"))
+    print_table(f"Fig 7-10: KPCA + 10NN classification ({dataset}, k={k}, "
+                f"c={c})", ["dataset", "method", "U-time ms", "test err"],
+                rows)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--datasets", nargs="*", default=["pendigit",
+                                                     "mushrooms"])
+    p.add_argument("--k", type=int, default=3)
+    p.add_argument("--knn", action="store_true")
+    args = p.parse_args(argv)
+    for ds in args.datasets:
+        run_misalignment(ds, k=args.k)
+        if args.knn:
+            run_knn(ds, k=args.k)
+
+
+if __name__ == "__main__":
+    main()

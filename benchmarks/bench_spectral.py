@@ -1,0 +1,61 @@
+"""Paper Figures 11/12: approximate spectral clustering NMI.
+
+CUC^T ~ K as the affinity; degree-normalized Laplacian top-k eigenvectors
+(via Lemma 10 on (D^-1/2 C) U (D^-1/2 C)^T), row-normalized, k-means, NMI.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (calibrate_sigma, kmeans, make_dataset, nmi,
+                               print_table)
+from repro.core import eig, spsd
+from repro.core.kernelop import RBFKernel
+
+
+def run(dataset: str, k: int, cs=(16, 32, 64), seed=0):
+    X, y = make_dataset(dataset, seed=seed)
+    sigma = calibrate_sigma(X, 0.9, max(k, 3))
+    Kop = RBFKernel(X, sigma=sigma)
+
+    rows = []
+    for c in cs:
+        base = spsd.sample_C(Kop, jax.random.PRNGKey(seed), c)
+        methods = {}
+        W = Kop.block(base.P_indices, base.P_indices)
+        methods["nystrom"] = (base.C, spsd.nystrom_U(W))
+        for m in (4, 8):
+            ap = spsd.fast_model_from_C(
+                Kop, base.C, jax.random.PRNGKey(seed + m), m * c,
+                P_indices=base.P_indices, s_sketch="uniform")
+            methods[f"fast s={m}c"] = (ap.C, ap.U)
+        proto = spsd.prototype_model(Kop, base.C, base.P_indices)
+        methods["prototype"] = (proto.C, proto.U)
+
+        for name, (C, U) in methods.items():
+            t0 = time.perf_counter()
+            V = eig.spectral_embedding(C, U, k)
+            lab = kmeans(np.asarray(V), k, seed=seed)
+            dt = time.perf_counter() - t0
+            rows.append((dataset, c, name, f"{dt * 1e3:8.1f}",
+                         f"{nmi(lab, y):.4f}"))
+    print_table(f"Fig 11/12: spectral clustering ({dataset}, k={k})",
+                ["dataset", "c", "method", "time ms", "NMI"], rows)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--datasets", nargs="*", default=["pendigit"])
+    p.add_argument("--k", type=int, default=8)
+    args = p.parse_args(argv)
+    for ds in args.datasets:
+        run(ds, args.k)
+
+
+if __name__ == "__main__":
+    main()

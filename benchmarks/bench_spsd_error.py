@@ -1,0 +1,79 @@
+"""Paper Figures 3 & 4: kernel approximation error vs s/n.
+
+For each dataset: C = ceil(n/100) columns (uniform, or uniform+adaptive^2
+with --adaptive, Fig. 4), then the U matrix from
+  - the Nystrom method,
+  - the fast model (S = uniform / leverage sampling), s in {2c..40c},
+  - the prototype model (s = n).
+y-axis metric: ||K - C U C^T||_F^2 / ||K||_F^2.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from benchmarks.common import (DATASETS, calibrate_sigma, make_dataset,
+                               print_table)
+from repro.core import spsd
+from repro.core.adaptive import uniform_adaptive2_indices
+from repro.core.kernelop import RBFKernel
+
+
+def run(dataset: str, eta: float, adaptive: bool, seed: int = 0,
+        s_mults=(2, 4, 8, 20, 40), n=None):
+    X, _ = make_dataset(dataset, seed=seed, n=n)
+    n_ = X.shape[0]
+    k = max(n_ // 100, 3)
+    sigma = calibrate_sigma(X, eta, k)
+    Kop = RBFKernel(X, sigma=sigma)
+    c = max(n_ // 100, 8)
+
+    key = jax.random.PRNGKey(seed)
+    if adaptive:
+        idx = uniform_adaptive2_indices(Kop, key, c)
+        C = Kop.columns(idx)
+        base = spsd.SPSDApprox(C=C, U=None, P_indices=idx)
+    else:
+        base = spsd.sample_C(Kop, key, c)
+
+    rows = []
+    W = Kop.block(base.P_indices, base.P_indices)
+    nys = spsd.SPSDApprox(C=base.C, U=spsd.nystrom_U(W),
+                          P_indices=base.P_indices)
+    rows.append(("nystrom", "-", float(spsd.relative_error(Kop, nys))))
+
+    for s_kind in ("uniform", "leverage"):
+        for m in s_mults:
+            errs = [float(spsd.relative_error(Kop, spsd.fast_model_from_C(
+                Kop, base.C, jax.random.PRNGKey(100 + i), m * c,
+                P_indices=base.P_indices, s_sketch=s_kind)))
+                for i in range(3)]
+            rows.append((f"fast[{s_kind}]", f"s={m}c "
+                         f"(s/n={m * c / n_:.2f})", float(np.mean(errs))))
+
+    proto = spsd.prototype_model(Kop, base.C, base.P_indices)
+    rows.append(("prototype", "s=n", float(spsd.relative_error(Kop, proto))))
+
+    title = (f"Fig {'4' if adaptive else '3'}: {dataset} n={n_} c={c} "
+             f"sigma={sigma:.3f} eta~{eta}")
+    print_table(title, ["model", "sketch", "rel err ||K-CUC'||F^2/||K||F^2"],
+                [(a, b, f"{e:.5f}") for a, b, e in rows])
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--datasets", nargs="*", default=["letters", "pendigit",
+                                                     "mushrooms"])
+    p.add_argument("--eta", type=float, default=0.9)
+    p.add_argument("--adaptive", action="store_true")
+    p.add_argument("--n", type=int, default=None)
+    args = p.parse_args(argv)
+    for ds in args.datasets:
+        run(ds, args.eta, args.adaptive, n=args.n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Paper Table 3: U-matrix time & #entries-of-K scaling.
+
+Measures wall-clock of computing U given C for the three models at growing
+n, plus the number of kernel entries each must observe:
+  nystrom: nc | prototype: n^2 | fast: nc + (s-c)^2.
+The fast model should scale ~linearly in n; the prototype ~quadratically.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import make_dataset, print_table
+from repro.core import spsd
+from repro.core.kernelop import RBFKernel
+
+
+def run(ns=(500, 1000, 2000, 4000), seed=0):
+    rows = []
+    for n in ns:
+        X, _ = make_dataset("letters", seed=seed, n=n)
+        Kop = RBFKernel(X, sigma=1.0)
+        c = max(n // 100, 8)
+        s = 8 * c
+        base = spsd.sample_C(Kop, jax.random.PRNGKey(seed), c)
+
+        t0 = time.perf_counter()
+        W = Kop.block(base.P_indices, base.P_indices)
+        jax.block_until_ready(spsd.nystrom_U(W))
+        t_nys = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        ap = spsd.fast_model_from_C(Kop, base.C, jax.random.PRNGKey(1), s,
+                                    P_indices=base.P_indices,
+                                    s_sketch="leverage")
+        jax.block_until_ready(ap.U)
+        t_fast = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        proto = spsd.prototype_model(Kop, base.C, base.P_indices)
+        jax.block_until_ready(proto.U)
+        t_proto = time.perf_counter() - t0
+
+        rows.append((n, c, s,
+                     f"{t_nys * 1e3:9.1f}", f"{n * c:>10,}",
+                     f"{t_fast * 1e3:9.1f}", f"{n * c + (s - c) ** 2:>10,}",
+                     f"{t_proto * 1e3:9.1f}", f"{n * n:>12,}"))
+    print_table("Table 3: U-matrix cost scaling",
+                ["n", "c", "s", "nys ms", "nys #K", "fast ms", "fast #K",
+                 "proto ms", "proto #K"], rows)
+
+    # linear-vs-quadratic check across the n range
+    n0, n1 = ns[0], ns[-1]
+    f0 = float(rows[0][5])
+    f1 = float(rows[-1][5])
+    p0 = float(rows[0][7])
+    p1 = float(rows[-1][7])
+    print(f"\nscaling n x{n1 // n0}: fast x{f1 / max(f0, 1e-9):.1f}, "
+          f"prototype x{p1 / max(p0, 1e-9):.1f} "
+          f"(paper: fast ~linear, prototype ~quadratic)")
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--ns", nargs="*", type=int,
+                   default=[500, 1000, 2000, 4000])
+    args = p.parse_args(argv)
+    run(tuple(args.ns))
+
+
+if __name__ == "__main__":
+    main()

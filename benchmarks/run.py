@@ -1,0 +1,55 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # CPU-sized defaults
+    PYTHONPATH=src python -m benchmarks.run --only cur time
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ["spsd_error", "spsd_error_adaptive", "kpca", "spectral", "cur",
+          "time", "landmark", "ablations"]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", nargs="*", default=None,
+                   help=f"subset of {SUITES}")
+    args = p.parse_args(argv)
+    picked = args.only or SUITES
+
+    t0 = time.time()
+    if "spsd_error" in picked:
+        from benchmarks import bench_spsd_error
+        bench_spsd_error.main(["--datasets", "letters", "pendigit",
+                               "mushrooms"])
+        bench_spsd_error.main(["--datasets", "pendigit", "--eta", "0.99"])
+    if "spsd_error_adaptive" in picked:
+        from benchmarks import bench_spsd_error
+        bench_spsd_error.main(["--datasets", "pendigit", "--adaptive"])
+    if "kpca" in picked:
+        from benchmarks import bench_kpca
+        bench_kpca.main(["--datasets", "pendigit", "mushrooms", "--knn"])
+    if "spectral" in picked:
+        from benchmarks import bench_spectral
+        bench_spectral.main(["--datasets", "pendigit"])
+    if "cur" in picked:
+        from benchmarks import bench_cur
+        bench_cur.main([])
+    if "time" in picked:
+        from benchmarks import bench_time
+        bench_time.main([])
+    if "landmark" in picked:
+        from benchmarks import bench_landmark_attention
+        bench_landmark_attention.main([])
+    if "ablations" in picked:
+        from benchmarks import bench_ablations
+        bench_ablations.main([])
+    print(f"\nbenchmarks completed in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

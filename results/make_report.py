@@ -1,0 +1,38 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md tables."""
+import glob
+import json
+import sys
+
+PEAK = 197e12
+
+
+def mfu_like(r):
+    """roofline fraction: ideal model time / dominant derived term."""
+    ideal = (r["model_gflops"] / r["chips"]) * 1e9 / PEAK
+    dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return ideal / dom if dom > 0 else 0.0
+
+
+def row(r):
+    gb = r.get("memory_analysis", {}).get("bytes_per_chip", 0) / 1e9
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+            f"{gb:.1f} | {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {r['bottleneck'][:4]} | "
+            f"{100*r['useful_flops_frac']:.0f}% | {100*mfu_like(r):.1f}% |")
+
+
+def main(pattern="results/dryrun/*.json"):
+    rows = []
+    for f in sorted(glob.glob(pattern)):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | kind | GB/chip | compute ms | memory ms "
+          "| coll ms | bound | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(row(r))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

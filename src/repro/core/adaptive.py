@@ -1,0 +1,43 @@
+"""uniform+adaptive² column selection (Wang, Luo, Zhang 2016), used by Fig. 4.
+
+Round 0: c/3 columns uniformly.  Rounds 1-2: c/3 columns each, sampled with
+probability proportional to the squared residual column norms
+||k_:j − C C† k_:j||² of the current sketch.  Needs K (or an operator whose
+columns/matmat are cheap) — hence Fig. 4's caveat that adaptive sampling gives
+up the fast model's time advantage but improves C itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernelop import as_operator
+from repro.core.leverage import pinv
+
+
+def _residual_column_norms(Kop, idx: jnp.ndarray) -> jnp.ndarray:
+    """||(I − C C†) K||² column norms; K materialized blockwise via operator."""
+    C = Kop.columns(idx).astype(jnp.float32)
+    Cp = pinv(C)                        # (c, n)
+    K = Kop.full().astype(jnp.float32)
+    resid = K - C @ (Cp @ K)
+    return jnp.sum(resid * resid, axis=0)
+
+
+def uniform_adaptive2_indices(K, key: jax.Array, c: int) -> jnp.ndarray:
+    """Return c column indices via uniform + two adaptive rounds."""
+    Kop = as_operator(K)
+    n = Kop.n
+    c0 = c - 2 * (c // 3)
+    c1 = c // 3
+    k0, k1, k2 = jax.random.split(key, 3)
+
+    idx = jax.random.choice(k0, n, shape=(c0,), replace=False)
+    for kk, extra in ((k1, c1), (k2, c1)):
+        if extra == 0:
+            continue
+        norms = _residual_column_norms(Kop, idx)
+        p = norms / jnp.maximum(jnp.sum(norms), 1e-30)
+        new = jax.random.choice(kk, n, shape=(extra,), replace=True, p=p)
+        idx = jnp.concatenate([idx, new])
+    return idx

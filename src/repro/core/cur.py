@@ -1,0 +1,127 @@
+"""CUR matrix decomposition (paper §5).
+
+Given A (m×n), C = c columns, R = r rows:
+
+- optimal:    U* = C† A R†                              (Eq. 8)  O(mn·min(c,r))
+- drineas08:  U  = (P_R^T A P_C)†                        (Fig. 2c baseline)
+- fast:       Ũ  = (S_C^T C)† (S_C^T A S_R) (R S_R)†     (Eq. 9)  O(cr/ε · min(m,n) · min(c,r))
+
+plus the adaptive-sampling column/row selection used by Theorem 8.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.leverage import pinv, row_leverage_scores
+
+
+class CURApprox(NamedTuple):
+    C: jnp.ndarray                 # (m, c)
+    U: jnp.ndarray                 # (c, r)
+    R: jnp.ndarray                 # (r, n)
+    col_indices: Optional[jnp.ndarray] = None
+    row_indices: Optional[jnp.ndarray] = None
+
+    def dense(self) -> jnp.ndarray:
+        return self.C @ self.U @ self.R
+
+
+def select_cur_sketches(A: jnp.ndarray, key: jax.Array, c: int, r: int):
+    """Uniformly sample columns/rows (the paper's §5.3 setup)."""
+    kc, kr = jax.random.split(key)
+    m, n = A.shape
+    cidx = jax.random.choice(kc, n, shape=(c,), replace=False)
+    ridx = jax.random.choice(kr, m, shape=(r,), replace=False)
+    return jnp.take(A, cidx, axis=1), jnp.take(A, ridx, axis=0), cidx, ridx
+
+
+def optimal_U(A: jnp.ndarray, C: jnp.ndarray, R: jnp.ndarray) -> jnp.ndarray:
+    return pinv(C) @ A.astype(jnp.float32) @ pinv(R)
+
+
+def drineas08_U(A: jnp.ndarray, cidx: jnp.ndarray, ridx: jnp.ndarray) -> jnp.ndarray:
+    """U = (P_R^T A P_C)†  — the poor-quality baseline of Fig. 2(c)."""
+    W = jnp.take(jnp.take(A, ridx, axis=0), cidx, axis=1)   # (r, c)
+    return pinv(W)                                           # (c, r)
+
+
+def fast_U_cur(ScC: jnp.ndarray, ScASr: jnp.ndarray, RSr: jnp.ndarray) -> jnp.ndarray:
+    """Ũ = (S_C^T C)† (S_C^T A S_R) (R S_R)†  (Eq. 9)."""
+    return pinv(ScC) @ ScASr.astype(jnp.float32) @ pinv(RSr)
+
+
+def fast_cur(
+    A: jnp.ndarray,
+    key: jax.Array,
+    c: int,
+    r: int,
+    sc: int,
+    sr: int,
+    sketch_kind: str = "leverage",
+    enforce_subset: bool = True,
+    scale: bool = False,
+) -> CURApprox:
+    """End-to-end fast CUR: uniform C/R, then the sketched Ũ (Thm 9 setup).
+
+    Column-selection sketches observe only an (sc × sr) block of A plus C and R.
+    Leverage sampling uses row scores of C (for S_C) and of R^T (for S_R).
+    """
+    m, n = A.shape
+    kcr, kc, kr = jax.random.split(key, 3)
+    C, R, cidx, ridx = select_cur_sketches(A, kcr, c, r)
+
+    if sketch_kind in ("uniform", "leverage"):
+        if sketch_kind == "leverage":
+            Sc = sk.leverage_column_sketch(kc, row_leverage_scores(C), sc, scale=scale)
+            Sr = sk.leverage_column_sketch(kr, row_leverage_scores(R.T), sr, scale=scale)
+        else:
+            Sc = sk.uniform_column_sketch(kc, m, sc, scale=scale)
+            Sr = sk.uniform_column_sketch(kr, n, sr, scale=scale)
+        if enforce_subset:
+            # §4.5 applied to CUR: rows selected by R ⊂ S_C, cols selected by C ⊂ S_R
+            Sc = sk.subset_union_sketch(Sc, ridx, m)
+            Sr = sk.subset_union_sketch(Sr, cidx, n)
+        ScC = Sc.left(C)
+        RSr = Sr.left(R.T).T
+        blk = jnp.take(jnp.take(A, Sc.indices, axis=0), Sr.indices, axis=1)
+        ScASr = blk * (Sc.scales[:, None] * Sr.scales[None, :])
+    else:
+        Sc = sk.make_sketch(sketch_kind, kc, m, sc)
+        Sr = sk.make_sketch(sketch_kind, kr, n, sr)
+        ScC = Sc.left(C)
+        RSr = Sr.left(R.T).T
+        ScASr = Sc.left(Sr.left(A.T).T)
+
+    U = fast_U_cur(ScC, ScASr, RSr)
+    return CURApprox(C=C, U=U, R=R, col_indices=cidx, row_indices=ridx)
+
+
+def optimal_cur(A: jnp.ndarray, key: jax.Array, c: int, r: int) -> CURApprox:
+    C, R, cidx, ridx = select_cur_sketches(A, key, c, r)
+    return CURApprox(C=C, U=optimal_U(A, C, R), R=R,
+                     col_indices=cidx, row_indices=ridx)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive row selection (Wang & Zhang 2013; used by Theorem 8)
+# ---------------------------------------------------------------------------
+
+def adaptive_row_indices(A: jnp.ndarray, base: jnp.ndarray, key: jax.Array,
+                         extra: int) -> jnp.ndarray:
+    """Sample ``extra`` rows ∝ squared residual norms against rows in ``base``."""
+    R1 = jnp.take(A, base, axis=0)
+    resid = A.astype(jnp.float32) - (A.astype(jnp.float32) @ pinv(R1)) @ R1.astype(jnp.float32)
+    norms = jnp.sum(resid * resid, axis=1)
+    p = norms / jnp.maximum(jnp.sum(norms), 1e-30)
+    idx = jax.random.choice(key, A.shape[0], shape=(extra,), replace=True, p=p)
+    return jnp.concatenate([base, idx])
+
+
+def relative_error(A: jnp.ndarray, approx: CURApprox) -> jnp.ndarray:
+    A32 = A.astype(jnp.float32)
+    Rm = A32 - approx.dense().astype(jnp.float32)
+    return jnp.sum(Rm * Rm) / jnp.sum(A32 * A32)

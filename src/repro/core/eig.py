@@ -1,0 +1,95 @@
+"""Downstream solvers on C U C^T (paper Appendix A).
+
+These are what make the fast model useful: with (C, U) at hand the k-eigendecomposition
+costs O(nc²) and the regularized solve O(nc²) (O(c³+nc) given the SVD of C).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.leverage import pinv
+
+
+class EigResult(NamedTuple):
+    eigenvalues: jnp.ndarray    # (k,) descending
+    eigenvectors: jnp.ndarray   # (n, k) orthonormal
+
+
+def approx_eigh(C: jnp.ndarray, U: jnp.ndarray, k: int) -> EigResult:
+    """Lemma 10: eigendecomposition of C U C^T in O(nc²).
+
+    C = U_C Σ_C V_C^T;  Z = (Σ_C V_C^T) U (Σ_C V_C^T)^T = V_Z Λ V_Z^T;
+    then C U C^T = (U_C V_Z) Λ (U_C V_Z)^T.
+    """
+    C32 = C.astype(jnp.float32)
+    Uc, sc, Vct = jnp.linalg.svd(C32, full_matrices=False)
+    M = (sc[:, None] * Vct) @ U.astype(jnp.float32) @ (sc[:, None] * Vct).T
+    M = 0.5 * (M + M.T)
+    lam, Vz = jnp.linalg.eigh(M)                     # ascending
+    lam = lam[::-1]
+    Vz = Vz[:, ::-1]
+    vecs = Uc @ Vz
+    return EigResult(eigenvalues=lam[:k], eigenvectors=vecs[:, :k])
+
+
+def woodbury_solve(C: jnp.ndarray, U: jnp.ndarray, alpha: float,
+                   y: jnp.ndarray) -> jnp.ndarray:
+    """Lemma 11: solve (C U C^T + αIₙ) w = y in O(nc²).
+
+    (CUC^T + αI)⁻¹ = α⁻¹ I − α⁻¹ C (α U⁻¹ + C^T C)⁻¹ C^T   (α>0, U SPSD).
+
+    Implemented in the inverse-free form α U (α I + C^T C U)⁻¹ so singular U is
+    fine (matches the Moore–Penrose limit used in the paper's experiments).
+    """
+    C32 = C.astype(jnp.float32)
+    U32 = U.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    CtC = C32.T @ C32
+    c = C32.shape[1]
+    # M = (α U^{-1} + C^T C)^{-1} = U (α I + C^T C U)^{-1}
+    inner = alpha * jnp.eye(c, dtype=jnp.float32) + CtC @ U32
+    M = U32 @ jnp.linalg.solve(inner, jnp.eye(c, dtype=jnp.float32))
+    Cty = C32.T @ y32
+    return (y32 - C32 @ (M @ Cty)) / alpha
+
+
+def kpca_features(C: jnp.ndarray, U: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, EigResult]:
+    """§6.3 KPCA: train features = Λ^{1/2} V^T  columns (returned as (n, k))."""
+    eig = approx_eigh(C, U, k)
+    lam = jnp.maximum(eig.eigenvalues, 0.0)
+    feats = eig.eigenvectors * jnp.sqrt(lam)[None, :]
+    return feats, eig
+
+
+def kpca_transform(eig: EigResult, k_x: jnp.ndarray) -> jnp.ndarray:
+    """Test features Λ^{-1/2} V^T k(x) for kernel column(s) k_x (n, b)."""
+    lam = jnp.maximum(eig.eigenvalues, 1e-12)
+    return (eig.eigenvectors.T @ k_x) / jnp.sqrt(lam)[:, None]
+
+
+def misalignment(U_true: jnp.ndarray, V_approx: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 10: (1/k)||U_k − Ṽ Ṽ^T U_k||_F² ∈ [0, 1]."""
+    k = U_true.shape[1]
+    proj = V_approx @ (V_approx.T @ U_true)
+    d = U_true - proj
+    return jnp.sum(d * d) / k
+
+
+def spectral_embedding(C: jnp.ndarray, U: jnp.ndarray, k: int,
+                       eps: float = 1e-9) -> jnp.ndarray:
+    """§6.4: normalized-Laplacian top-k eigenvectors from CUC^T ≈ K.
+
+    d = CUC^T 1;  L = I − D^{-1/2} CUC^T D^{-1/2}; bottom-k of L = top-k of
+    (D^{-1/2}C) U (D^{-1/2}C)^T — computed via Lemma 10. Rows are normalized.
+    """
+    ones = jnp.ones((C.shape[0], 1), C.dtype)
+    d = (C @ (U @ (C.T @ ones)))[:, 0]
+    dinv = 1.0 / jnp.sqrt(jnp.maximum(d, eps))
+    Cn = C * dinv[:, None]
+    eig = approx_eigh(Cn, U, k)
+    V = eig.eigenvectors
+    norms = jnp.linalg.norm(V, axis=1, keepdims=True)
+    return V / jnp.maximum(norms, eps)

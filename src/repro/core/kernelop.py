@@ -1,0 +1,177 @@
+"""Implicit SPSD operators.
+
+The paper's efficiency story depends on *never* materializing the n×n kernel
+matrix (Fig. 1, Table 3 "#Entries" column).  ``KernelOperator`` exposes exactly
+the access patterns the fast model needs:
+
+- ``columns(idx)``   -> K[:, idx]           (n × c)    for C = K P
+- ``block(ri, ci)``  -> K[ri][:, ci]        (|ri|×|ci|) for S^T K S
+- ``diag()``                                            for RBF trace tricks
+- ``full()``         -> K                   (prototype model / tests only)
+
+``RBFKernel`` computes entries on the fly from the d-dimensional data; on TPU the
+block computation is backed by the fused Pallas kernel in
+``repro.kernels.rbf_sketch`` (see ``use_pallas``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SPSDOperator:
+    n: int
+
+    def columns(self, idx: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def block(self, row_idx: jnp.ndarray, col_idx: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def full(self) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def diag(self) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def matmat(self, V: jnp.ndarray) -> jnp.ndarray:     # K @ V
+        return self.full() @ V
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DenseSPSD(SPSDOperator):
+    K: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.K,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.K.shape[0])
+
+    def columns(self, idx):
+        return jnp.take(self.K, idx, axis=1)
+
+    def block(self, row_idx, col_idx):
+        return jnp.take(jnp.take(self.K, row_idx, axis=0), col_idx, axis=1)
+
+    def full(self):
+        return self.K
+
+    def diag(self):
+        return jnp.diagonal(self.K)
+
+    def matmat(self, V):
+        return self.K @ V
+
+
+def _sqdist(X: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared distances, MXU-friendly: |x|^2 + |y|^2 - 2 x.y."""
+    xx = jnp.sum(X * X, axis=1)
+    yy = jnp.sum(Y * Y, axis=1)
+    cross = X @ Y.T
+    return jnp.maximum(xx[:, None] + yy[None, :] - 2.0 * cross, 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RBFKernel(SPSDOperator):
+    """K_ij = exp(-|x_i - x_j|^2 / (2 sigma^2)) computed from X (n × d)."""
+
+    X: jnp.ndarray
+    sigma: float
+    use_pallas: bool = False
+
+    def tree_flatten(self):
+        return (self.X,), (self.sigma, self.use_pallas)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+    @property
+    def n(self) -> int:
+        return int(self.X.shape[0])
+
+    def _gamma(self):
+        return 1.0 / (2.0 * self.sigma ** 2)
+
+    def columns(self, idx):
+        return self.block(jnp.arange(self.n), idx)
+
+    def block(self, row_idx, col_idx):
+        Xr = jnp.take(self.X, row_idx, axis=0)
+        Xc = jnp.take(self.X, col_idx, axis=0)
+        if self.use_pallas:
+            from repro.kernels.rbf_sketch import ops as rbf_ops
+            return rbf_ops.rbf_block(Xr, Xc, self.sigma)
+        return jnp.exp(-self._gamma() * _sqdist(Xr, Xc))
+
+    def full(self):
+        return jnp.exp(-self._gamma() * _sqdist(self.X, self.X))
+
+    def diag(self):
+        return jnp.ones((self.n,), self.X.dtype)
+
+    def matmat(self, V, block: int = 2048):
+        """Blocked K @ V without materializing K (footnote-2 memory trick)."""
+        n = self.n
+
+        def body(i, acc):
+            idx = i * block + jnp.arange(block)
+            idx = jnp.clip(idx, 0, n - 1)
+            rows = self.block(idx, jnp.arange(n))      # (block, n)
+            return acc.at[i * block:(i + 1) * block].set(rows @ V)
+
+        nblocks = (n + block - 1) // block
+        out = jnp.zeros((nblocks * block, V.shape[1]), V.dtype)
+        out = jax.lax.fori_loop(0, nblocks, body, out)
+        return out[:n]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LinearKernel(SPSDOperator):
+    """K = X X^T (n × n) from X (n × d)."""
+
+    X: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.X,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.X.shape[0])
+
+    def columns(self, idx):
+        return self.X @ jnp.take(self.X, idx, axis=0).T
+
+    def block(self, row_idx, col_idx):
+        return jnp.take(self.X, row_idx, axis=0) @ jnp.take(self.X, col_idx, axis=0).T
+
+    def full(self):
+        return self.X @ self.X.T
+
+    def diag(self):
+        return jnp.sum(self.X * self.X, axis=1)
+
+    def matmat(self, V):
+        return self.X @ (self.X.T @ V)
+
+
+def as_operator(K) -> SPSDOperator:
+    if isinstance(K, SPSDOperator):
+        return K
+    return DenseSPSD(jnp.asarray(K))

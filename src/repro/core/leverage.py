@@ -1,0 +1,52 @@
+"""Leverage scores and coherence (paper §2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _default_rcond(shape) -> float:
+    """numpy-style cutoff: max(m, n) * eps(f32).  1e-10 keeps numerically-zero
+    singular values in f32 and destroys the pinv — see tests/test_spsd_properties."""
+    return max(shape) * float(jnp.finfo(jnp.float32).eps)
+
+
+def row_leverage_scores(A: jnp.ndarray, rcond: float = None) -> jnp.ndarray:
+    """l_i = ||u_i:||^2 where A = U Σ V^T is the condensed SVD.
+
+    Computed from the thin SVD in f32.  Sum of scores equals rank(A).
+    """
+    rcond = _default_rcond(A.shape) if rcond is None else rcond
+    A32 = A.astype(jnp.float32)
+    u, s, _ = jnp.linalg.svd(A32, full_matrices=False)
+    cutoff = rcond * jnp.max(s)
+    mask = (s > cutoff).astype(jnp.float32)
+    return jnp.sum((u * mask[None, :]) ** 2, axis=1)
+
+
+def column_leverage_scores(A: jnp.ndarray, rcond: float = None) -> jnp.ndarray:
+    return row_leverage_scores(A.T, rcond)
+
+
+def row_coherence(A: jnp.ndarray) -> jnp.ndarray:
+    """mu(A) = (m / rank) * max_i l_i  in [1, m]."""
+    lev = row_leverage_scores(A)
+    rank = jnp.sum(lev)
+    return A.shape[0] / rank * jnp.max(lev)
+
+
+def pinv(A: jnp.ndarray, rcond: float = None) -> jnp.ndarray:
+    """Moore-Penrose inverse via f32 SVD (small s×c / c×c blocks only)."""
+    rcond = _default_rcond(A.shape) if rcond is None else rcond
+    A32 = A.astype(jnp.float32)
+    u, s, vt = jnp.linalg.svd(A32, full_matrices=False)
+    cutoff = rcond * jnp.max(s)
+    sinv = jnp.where(s > cutoff, 1.0 / s, 0.0)
+    return (vt.T * sinv[None, :]) @ u.T
+
+
+def orthonormal_basis(A: jnp.ndarray, rcond: float = None) -> jnp.ndarray:
+    """Orthonormal basis of range(A) (Algorithm 1, step 3 'optional')."""
+    A32 = A.astype(jnp.float32)
+    u, s, _ = jnp.linalg.svd(A32, full_matrices=False)
+    return u  # zero-singular-value columns contribute nothing downstream

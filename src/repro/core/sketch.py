@@ -1,0 +1,277 @@
+"""Matrix sketching operators (paper §3.1, Lemma 2 toolbox).
+
+Five families, all TPU-native:
+
+- uniform column sampling        (gather)
+- leverage-score column sampling (gather; scaled or paper-§4.5 unscaled)
+- Gaussian projection            (GEMM)
+- SRHT                           (fast Walsh-Hadamard transform + gather)
+- CountSketch                    (segment-sum)
+
+A sketch ``S ∈ R^{n×s}`` is never materialized; we expose the three products the
+paper needs: ``S^T A`` (rows), ``A S`` (cols), and the symmetric form ``S^T K S``.
+Column-selection sketches additionally expose their index set so SPSD/CUR code can
+read *blocks* of an implicit kernel matrix (Fig. 1's memory trick).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Column selection sketches (one nonzero per column of S)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ColumnSketch:
+    """S with S[i_j, j] = scale_j (Eq. 1).  ``indices``: (s,), ``scales``: (s,)."""
+
+    indices: jnp.ndarray
+    scales: jnp.ndarray
+    n: int
+
+    def tree_flatten(self):
+        return (self.indices, self.scales), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def s(self) -> int:
+        return int(self.indices.shape[0])
+
+    # S^T A : select + scale rows of A
+    def left(self, A: jnp.ndarray) -> jnp.ndarray:
+        return jnp.take(A, self.indices, axis=0) * self.scales[:, None]
+
+    # A S : select + scale columns of A
+    def right(self, A: jnp.ndarray) -> jnp.ndarray:
+        return jnp.take(A, self.indices, axis=1) * self.scales[None, :]
+
+    # S^T K S for an explicit K
+    def sym(self, K: jnp.ndarray) -> jnp.ndarray:
+        blk = jnp.take(jnp.take(K, self.indices, axis=0), self.indices, axis=1)
+        return blk * (self.scales[:, None] * self.scales[None, :])
+
+
+def uniform_column_sketch(key: jax.Array, n: int, s: int,
+                          scale: bool = True) -> ColumnSketch:
+    """Uniform sampling without replacement (p_i = 1/n)."""
+    idx = jax.random.choice(key, n, shape=(s,), replace=False)
+    sc = jnp.full((s,), jnp.sqrt(n / s) if scale else 1.0, dtype=jnp.float32)
+    return ColumnSketch(idx, sc, n)
+
+
+def leverage_column_sketch(key: jax.Array, lev: jnp.ndarray, s: int,
+                           scale: bool = False) -> ColumnSketch:
+    """Leverage-score sampling (Algorithm 2).
+
+    ``lev``: (n,) row leverage scores of C (sum = rank(C)).  Sampling is with
+    replacement, p_i ∝ lev_i.  Default is the paper's §4.5 *unscaled* variant
+    (better numerical stability); ``scale=True`` gives the theory-exact scaling
+    1/sqrt(s·p_i).
+    """
+    n = lev.shape[0]
+    p = lev / jnp.sum(lev)
+    idx = jax.random.choice(key, n, shape=(s,), replace=True, p=p)
+    if scale:
+        sc = 1.0 / jnp.sqrt(s * jnp.take(p, idx))
+    else:
+        sc = jnp.ones((s,), dtype=jnp.float32)
+    return ColumnSketch(idx, sc.astype(jnp.float32), n)
+
+
+def subset_union_sketch(base: ColumnSketch, extra_indices: jnp.ndarray,
+                        n: int) -> ColumnSketch:
+    """Enforce P ⊂ S (Corollary 5): prepend the P indices with scale 1."""
+    idx = jnp.concatenate([extra_indices, base.indices])
+    sc = jnp.concatenate(
+        [jnp.ones((extra_indices.shape[0],), jnp.float32), base.scales])
+    return ColumnSketch(idx, sc, n)
+
+
+# ---------------------------------------------------------------------------
+# Gaussian projection
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GaussianSketch:
+    """S = G/sqrt(s), G_ij ~ N(0,1).  Materialized lazily row-block-wise."""
+
+    key: jax.Array
+    n: int
+    s: int
+
+    def tree_flatten(self):
+        return (self.key,), (self.n, self.s)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0], aux[1])
+
+    def _mat(self, dtype=jnp.float32) -> jnp.ndarray:
+        g = jax.random.normal(self.key, (self.n, self.s), dtype=dtype)
+        return g / jnp.sqrt(self.s).astype(dtype)
+
+    def left(self, A: jnp.ndarray) -> jnp.ndarray:   # S^T A : (s, d)
+        return self._mat(A.dtype).T @ A
+
+    def right(self, A: jnp.ndarray) -> jnp.ndarray:  # A S : (m, s)
+        return A @ self._mat(A.dtype)
+
+    def sym(self, K: jnp.ndarray) -> jnp.ndarray:
+        S = self._mat(K.dtype)
+        return S.T @ K @ S
+
+
+# ---------------------------------------------------------------------------
+# SRHT
+# ---------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def fwht(x: jnp.ndarray) -> jnp.ndarray:
+    """Fast Walsh-Hadamard transform along axis 0 (length must be a power of 2).
+
+    Unnormalized: result = H_n @ x with H entries ±1.
+    """
+    n = x.shape[0]
+    shape_rest = x.shape[1:]
+    h = 1
+    y = x
+    while h < n:
+        y = y.reshape((n // (2 * h), 2, h) + shape_rest)
+        a = y[:, 0]
+        b = y[:, 1]
+        y = jnp.stack([a + b, a - b], axis=1)
+        h *= 2
+    return y.reshape((n,) + shape_rest)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SRHTSketch:
+    """S = sqrt(n/s) * (1/sqrt(n)) D H P  (paper §3.1.2).
+
+    Applied in O(n log n) per column via the FWHT; n is zero-padded to the next
+    power of two (rademacher signs drawn for the padded length).
+    """
+
+    signs: jnp.ndarray        # (n_pad,)
+    indices: jnp.ndarray      # (s,) rows kept after the transform
+    n: int
+
+    def tree_flatten(self):
+        return (self.signs, self.indices), (self.n,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def s(self) -> int:
+        return int(self.indices.shape[0])
+
+    def left(self, A: jnp.ndarray) -> jnp.ndarray:
+        n_pad = self.signs.shape[0]
+        s = self.s
+        pad = [(0, n_pad - A.shape[0])] + [(0, 0)] * (A.ndim - 1)
+        Ap = jnp.pad(A, pad)
+        y = fwht(self.signs.reshape((-1,) + (1,) * (A.ndim - 1)) * Ap)
+        y = y / jnp.sqrt(n_pad).astype(A.dtype)          # orthonormal H D
+        y = jnp.take(y, self.indices, axis=0)
+        return y * jnp.sqrt(n_pad / s).astype(A.dtype)   # sampling scale
+
+    def right(self, A: jnp.ndarray) -> jnp.ndarray:
+        return self.left(A.T).T
+
+    def sym(self, K: jnp.ndarray) -> jnp.ndarray:
+        return self.left(self.left(K).T).T
+
+
+def srht_sketch(key: jax.Array, n: int, s: int) -> SRHTSketch:
+    kd, kp = jax.random.split(key)
+    n_pad = _next_pow2(n)
+    signs = jax.random.rademacher(kd, (n_pad,), dtype=jnp.float32)
+    idx = jax.random.choice(kp, n_pad, shape=(s,), replace=False)
+    return SRHTSketch(signs, idx, n)
+
+
+# ---------------------------------------------------------------------------
+# CountSketch
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CountSketch:
+    """One nonzero ±1 per *row* of S; S^T A is a signed segment-sum: O(nnz(A))."""
+
+    hashes: jnp.ndarray   # (n,) in [0, s)
+    signs: jnp.ndarray    # (n,) ±1
+    s: int
+
+    def tree_flatten(self):
+        return (self.hashes, self.signs), (self.s,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.hashes.shape[0])
+
+    def left(self, A: jnp.ndarray) -> jnp.ndarray:
+        signed = A * self.signs.reshape((-1,) + (1,) * (A.ndim - 1))
+        return jax.ops.segment_sum(signed, self.hashes, num_segments=self.s)
+
+    def right(self, A: jnp.ndarray) -> jnp.ndarray:
+        return self.left(A.T).T
+
+    def sym(self, K: jnp.ndarray) -> jnp.ndarray:
+        return self.left(self.left(K).T).T
+
+
+def count_sketch(key: jax.Array, n: int, s: int) -> CountSketch:
+    kh, ks = jax.random.split(key)
+    hashes = jax.random.randint(kh, (n,), 0, s)
+    signs = jax.random.rademacher(ks, (n,), dtype=jnp.float32)
+    return CountSketch(hashes, signs, s)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+SKETCH_KINDS = ("uniform", "leverage", "gaussian", "srht", "countsketch")
+
+
+def make_sketch(kind: str, key: jax.Array, n: int, s: int,
+                lev: Optional[jnp.ndarray] = None, scale: bool = False):
+    """Build any of the paper's five sketches (Table 4 row names)."""
+    if kind == "uniform":
+        return uniform_column_sketch(key, n, s, scale=scale)
+    if kind == "leverage":
+        if lev is None:
+            raise ValueError("leverage sketch needs leverage scores")
+        return leverage_column_sketch(key, lev, s, scale=scale)
+    if kind == "gaussian":
+        return GaussianSketch(key, n, s)
+    if kind == "srht":
+        return srht_sketch(key, n, s)
+    if kind == "countsketch":
+        return count_sketch(key, n, s)
+    raise ValueError(f"unknown sketch kind {kind!r}; one of {SKETCH_KINDS}")

@@ -1,0 +1,141 @@
+"""Landmark (sketched) attention — the paper's fast CUR applied to attention.
+
+Full attention computes ``softmax(QK^T/√d) V``.  Write ``G = exp(QK^T/√d)``
+(m × n, entrywise-positive Gram-like matrix).  Then
+
+    out = (G V) / (G 1).
+
+We approximate G once with the paper's fast CUR (Eq. 9) and reuse the factors
+for both the numerator and the normalizer:
+
+    G ≈ Ĉ Ũ R̂,   Ĉ = exp(Q K_P^T/√d) (m×c),   R̂ = exp(Q_P K^T/√d) (c×n),
+    Ũ = (S_q^T Ĉ)† (S_q^T G S_k) (R̂ S_k)†        — fast-CUR U, s = θ·c.
+
+``P`` are c landmark positions; sketches satisfy P ⊂ S (§4.5).  Plain
+Nyströmformer is the degenerate S = P case (exactly the paper's reading of
+Nyström as a crude sketched solve); the prototype-quality solve is S = I.
+
+Cost: O(m·c + n·c + s²c) instead of O(m·n) — sub-quadratic for s = O(c√(n/ε)).
+For autoregressive decode with a fixed context the factors ``Ũ (R̂ V)`` and
+``Ũ (R̂ 1)`` are cached (c×d_v and c×1), making per-token cost O(c·d).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cur import fast_U_cur
+from repro.core.leverage import pinv
+
+
+class LandmarkState(NamedTuple):
+    """Decode-time cache: everything that depends only on the context K/V."""
+    k_land: jnp.ndarray    # (c, d)   landmark keys
+    UV: jnp.ndarray        # (c, d_v) Ũ @ (R̂ V)
+    U1: jnp.ndarray        # (c,)     Ũ @ (R̂ 1)
+    scale: jnp.ndarray     # ()       max-logit offset used inside exp
+
+
+def _exp_scores(Q: jnp.ndarray, K: jnp.ndarray, inv_sqrt_d: float,
+                offset: jnp.ndarray) -> jnp.ndarray:
+    return jnp.exp((Q @ K.T).astype(jnp.float32) * inv_sqrt_d - offset)
+
+
+def landmark_indices(key: jax.Array, n: int, c: int) -> jnp.ndarray:
+    """Uniform landmarks (paper §6: uniform ≈ leverage for S; C uniform)."""
+    seg = n // c
+    base = jnp.arange(c) * seg
+    jitter = jax.random.randint(key, (c,), 0, max(seg, 1))
+    return jnp.clip(base + jitter, 0, n - 1)
+
+
+def sketched_attention(
+    Q: jnp.ndarray,               # (m, d)
+    K: jnp.ndarray,               # (n, d)
+    V: jnp.ndarray,               # (n, d_v)
+    key: jax.Array,
+    c: int,
+    theta: int = 4,               # s = θ·c, paper's Fig. 3/4 sweep
+    mode: str = "fast",           # fast | nystrom | prototype
+) -> jnp.ndarray:
+    """Non-causal sketched attention over a full context."""
+    m, d = Q.shape
+    n = K.shape[0]
+    inv_sqrt_d = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kp, kq, kk = jax.random.split(key, 3)
+
+    p_idx = landmark_indices(kp, n, c)
+    Kp = jnp.take(K, p_idx, axis=0)
+    Qp = jnp.take(Q, p_idx, axis=0) if m == n else jnp.take(K, p_idx, axis=0)
+
+    # stabilization offset: max landmark logit (global max is close for RBF-ish G)
+    offset = jnp.max((Qp @ Kp.T).astype(jnp.float32)) * inv_sqrt_d
+
+    Chat = _exp_scores(Q, Kp, inv_sqrt_d, offset)       # (m, c)
+    Rhat = _exp_scores(Qp, K, inv_sqrt_d, offset)       # (c, n)
+
+    if mode == "prototype":                              # S = I (exact solve)
+        G = _exp_scores(Q, K, inv_sqrt_d, offset)
+        U = pinv(Chat) @ G @ pinv(Rhat)
+    elif mode == "nystrom":                              # S = P
+        W = _exp_scores(Qp, Kp, inv_sqrt_d, offset)
+        U = pinv(W)
+    else:                                                # fast CUR (Eq. 9)
+        s = min(theta * c, n)
+        sq = jnp.concatenate([p_idx if m == n else jnp.arange(c),
+                              jax.random.choice(kq, m, (s - c,), replace=True)])
+        skx = jnp.concatenate([p_idx,
+                               jax.random.choice(kk, n, (s - c,), replace=True)])
+        ScC = jnp.take(Chat, sq, axis=0)                 # (s, c)
+        RSr = jnp.take(Rhat, skx, axis=1)                # (c, s)
+        G_blk = _exp_scores(jnp.take(Q, sq, axis=0),
+                            jnp.take(K, skx, axis=0), inv_sqrt_d, offset)
+        U = fast_U_cur(ScC, G_blk, RSr)
+
+    num = Chat @ (U @ (Rhat @ V.astype(jnp.float32)))    # (m, d_v)
+    den = Chat @ (U @ jnp.sum(Rhat, axis=1))             # (m,)
+    den = jnp.maximum(den, 1e-6)[:, None]
+    return (num / den).astype(V.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(c) per token against a 500k context
+# ---------------------------------------------------------------------------
+
+def build_landmark_state(K: jnp.ndarray, V: jnp.ndarray, key: jax.Array,
+                         c: int, theta: int = 4) -> LandmarkState:
+    """Precompute the context-side factors once (prefill)."""
+    n, d = K.shape
+    inv_sqrt_d = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    kp, ks = jax.random.split(key)
+    p_idx = landmark_indices(kp, n, c)
+    Kp = jnp.take(K, p_idx, axis=0)
+    offset = jnp.max((Kp @ Kp.T).astype(jnp.float32)) * inv_sqrt_d
+
+    Rhat = _exp_scores(Kp, K, inv_sqrt_d, offset)        # (c, n)
+    s = min(theta * c, n)
+    skx = jnp.concatenate(
+        [p_idx, jax.random.choice(ks, n, (s - c,), replace=True)])
+    # queries at the sketched rows are the landmark keys themselves (self-Gram)
+    ScC = _exp_scores(jnp.take(K, skx, axis=0), Kp, inv_sqrt_d, offset)
+    G_blk = _exp_scores(jnp.take(K, skx, axis=0), jnp.take(K, skx, axis=0),
+                        inv_sqrt_d, offset)
+    RSr = jnp.take(Rhat, skx, axis=1)
+    U = fast_U_cur(ScC, G_blk, RSr)
+
+    RV = Rhat @ V.astype(jnp.float32)                    # (c, d_v)
+    R1 = jnp.sum(Rhat, axis=1)                           # (c,)
+    return LandmarkState(k_land=Kp, UV=U @ RV, U1=U @ R1, scale=offset)
+
+
+def landmark_decode(state: LandmarkState, q: jnp.ndarray) -> jnp.ndarray:
+    """One-token attention read: (d,) query -> (d_v,) output, O(c·d)."""
+    d = q.shape[-1]
+    inv_sqrt_d = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = (state.k_land @ q.astype(jnp.float32)) * inv_sqrt_d - state.scale
+    cvec = jnp.exp(logits)                               # (c,)
+    num = cvec @ state.UV                                # (d_v,)
+    den = jnp.maximum(cvec @ state.U1, 1e-6)
+    return (num / den).astype(q.dtype)

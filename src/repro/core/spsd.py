@@ -1,0 +1,164 @@
+"""SPSD matrix approximation models (paper §3.2 & §4).
+
+All three models produce ``K ≈ C U C^T`` with the same sketch ``C = K P`` and
+differ only in U (Table 1):
+
+- prototype:  U* = C† K (C†)^T                    O(n²c), sees all of K
+- Nyström:    U  = (P^T K P)†                      O(c³),  sees n·c entries
+- fast:       U  = (S^T C)† (S^T K S) (C^T S)†     O(nc² + s²c), nc + (s-c)² entries
+
+``fast_spsd`` is Algorithm 1 end-to-end (with the §4.5 tricks: P ⊂ S and
+unscaled leverage sampling by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch as sk
+from repro.core.kernelop import SPSDOperator, as_operator
+from repro.core.leverage import pinv, row_leverage_scores
+
+
+class SPSDApprox(NamedTuple):
+    """K ≈ C U C^T."""
+    C: jnp.ndarray          # (n, c)
+    U: jnp.ndarray          # (c, c)
+    P_indices: Optional[jnp.ndarray] = None   # columns of K forming C (if sampled)
+
+    def dense(self) -> jnp.ndarray:
+        return self.C @ self.U @ self.C.T
+
+    def matmat(self, V: jnp.ndarray) -> jnp.ndarray:
+        return self.C @ (self.U @ (self.C.T @ V))
+
+
+# ---------------------------------------------------------------------------
+# U matrices
+# ---------------------------------------------------------------------------
+
+def prototype_U(K: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """U* = argmin_U ||K - C U C^T||_F = C† K (C†)^T  (Eq. 4)."""
+    Cp = pinv(C)
+    return Cp @ K.astype(Cp.dtype) @ Cp.T
+
+
+def nystrom_U(W: jnp.ndarray) -> jnp.ndarray:
+    """U^nys = W† with W = P^T K P (Eq. 3)."""
+    Wsym = 0.5 * (W + W.T)
+    return pinv(Wsym)
+
+
+def fast_U(StC: jnp.ndarray, StKS: jnp.ndarray) -> jnp.ndarray:
+    """U^fast = (S^T C)† (S^T K S) (C^T S)†  (Eq. 5).
+
+    StC: (s, c), StKS: (s, s).  Cost O(s²c) — independent of n.
+    """
+    StCp = pinv(StC)                      # (c, s)
+    return StCp @ StKS.astype(StCp.dtype) @ StCp.T
+
+
+# ---------------------------------------------------------------------------
+# End-to-end models
+# ---------------------------------------------------------------------------
+
+def sample_C(Kop: SPSDOperator, key: jax.Array, c: int) -> SPSDApprox:
+    """Uniformly sample c columns of K to form C (the sketch this paper fixes)."""
+    idx = jax.random.choice(key, Kop.n, shape=(c,), replace=False)
+    C = Kop.columns(idx)
+    return SPSDApprox(C=C, U=jnp.eye(c, dtype=C.dtype), P_indices=idx)
+
+
+def prototype_model(K, C: jnp.ndarray, P_indices=None) -> SPSDApprox:
+    Kop = as_operator(K)
+    U = prototype_U(Kop.full(), C)
+    return SPSDApprox(C=C, U=U, P_indices=P_indices)
+
+
+def nystrom_model(K, key: jax.Array, c: int) -> SPSDApprox:
+    Kop = as_operator(K)
+    idx = jax.random.choice(key, Kop.n, shape=(c,), replace=False)
+    C = Kop.columns(idx)
+    W = Kop.block(idx, idx)
+    return SPSDApprox(C=C, U=nystrom_U(W), P_indices=idx)
+
+
+def fast_model_from_C(
+    K,
+    C: jnp.ndarray,
+    key: jax.Array,
+    s: int,
+    P_indices: Optional[jnp.ndarray] = None,
+    s_sketch: str = "leverage",
+    enforce_subset: bool = True,
+    scale: bool = False,
+) -> SPSDApprox:
+    """Algorithm 1 given a fixed C (any provenance).
+
+    ``s_sketch`` ∈ {uniform, leverage, gaussian, srht, countsketch}.
+    Column-selection sketches read only an s×s block of K (Fig. 1);
+    projection sketches need K (or an operator able to form K S).
+    """
+    Kop = as_operator(K)
+    n = Kop.n
+
+    if s_sketch in ("uniform", "leverage"):
+        if s_sketch == "leverage":
+            lev = row_leverage_scores(C)
+            S = sk.leverage_column_sketch(key, lev, s, scale=scale)
+        else:
+            S = sk.uniform_column_sketch(key, n, s, scale=scale)
+        if enforce_subset and P_indices is not None:
+            S = sk.subset_union_sketch(S, P_indices, n)     # Corollary 5
+        StC = S.left(C)
+        blk = Kop.block(S.indices, S.indices)
+        StKS = blk * (S.scales[:, None] * S.scales[None, :])
+    else:
+        S = sk.make_sketch(s_sketch, key, n, s)
+        StC = S.left(C)
+        StKS = S.sym(Kop.full())
+
+    U = fast_U(StC, StKS)
+    return SPSDApprox(C=C, U=U, P_indices=P_indices)
+
+
+def fast_model(
+    K,
+    key: jax.Array,
+    c: int,
+    s: int,
+    s_sketch: str = "leverage",
+    enforce_subset: bool = True,
+    scale: bool = False,
+) -> SPSDApprox:
+    """Algorithm 1 end-to-end: uniform C = KP, then the fast U."""
+    Kop = as_operator(K)
+    kc, ks = jax.random.split(key)
+    base = sample_C(Kop, kc, c)
+    return fast_model_from_C(
+        Kop, base.C, ks, s,
+        P_indices=base.P_indices, s_sketch=s_sketch,
+        enforce_subset=enforce_subset, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Error metric used throughout the paper's §6
+# ---------------------------------------------------------------------------
+
+def relative_error(K, approx: SPSDApprox) -> jnp.ndarray:
+    """||K - C U C^T||_F² / ||K||_F²  (Fig. 3/4 y-axis)."""
+    Kd = as_operator(K).full().astype(jnp.float32)
+    R = Kd - approx.dense().astype(jnp.float32)
+    return jnp.sum(R * R) / jnp.sum(Kd * Kd)
+
+
+def error_vs_best_rank_k(K, approx: SPSDApprox, k: int) -> jnp.ndarray:
+    """||K - CUC^T||_F² / ||K - K_k||_F²  (the 1+ε target of Thm 3/Remark 4)."""
+    Kd = as_operator(K).full().astype(jnp.float32)
+    evals = jnp.linalg.eigvalsh(Kd)
+    tail = jnp.sum(jnp.sort(evals ** 2)[: Kd.shape[0] - k])
+    R = Kd - approx.dense().astype(jnp.float32)
+    return jnp.sum(R * R) / tail

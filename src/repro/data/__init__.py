@@ -1,0 +1,6 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataState,
+    SyntheticLM,
+    host_batch_slice,
+    make_pipeline,
+)

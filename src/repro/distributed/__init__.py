@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_pspec,
+    cache_shardings,
+    param_pspec,
+    param_shardings,
+    tree_shardings,
+)

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel is a package with three modules:
+
+- ``kernel.py`` — the ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling
+  (TPU is the target; ``interpret=True`` validates on CPU);
+- ``ops.py``    — the jit'd public wrapper (padding, dtype policy, vmap);
+- ``ref.py``    — the pure-jnp oracle every test asserts against.
+
+Kernels:
+
+- ``rbf_sketch``          fused S^T K S for RBF kernels straight from the data
+                          (paper Fig. 1 / footnote-2 memory trick: K never hits HBM)
+- ``flash_attention``     tiled online-softmax attention (causal / GQA / sliding
+                          window) for the LM substrate
+- ``landmark_attention``  the paper's fast-SPSD U applied to the attention Gram:
+                          fused exp-logits x (U @ R̂V) read — O(c·d) per query
+"""
+from repro.kernels.rbf_sketch import ops as rbf_ops              # noqa: F401
+from repro.kernels.flash_attention import ops as attention_ops   # noqa: F401
+from repro.kernels.landmark_attention import ops as landmark_ops  # noqa: F401

@@ -1,0 +1,47 @@
+"""Public jit'd wrapper: padding + block-size policy for flash attention."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_seq(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    s = x.shape[2]
+    pad = (-s) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
+                                   "block_q", "block_k"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    use_pallas: bool = True,
+                    block_q: int = _k.DEFAULT_BQ,
+                    block_k: int = _k.DEFAULT_BK) -> jnp.ndarray:
+    """Attention over q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D) with GQA broadcast.
+
+    Decode (Sq < Sk) right-aligns queries to keys; ``window`` is a sliding
+    window measured in key positions behind the query.
+    """
+    if not use_pallas:
+        return _ref.attention(q, k, v, causal=causal, window=window)
+    sq, sk = q.shape[2], k.shape[2]
+    bq = min(block_q, max(16, 1 << (sq - 1).bit_length()))
+    bk = min(block_k, max(16, 1 << (sk - 1).bit_length()))
+    qp = _pad_seq(q, bq)
+    kp = _pad_seq(k, bk)
+    vp = _pad_seq(v, bk)
+    out = _k.flash_attention_padded(
+        qp, kp, vp, sq=sq, sk=sk, causal=causal, window=window,
+        bq=bq, bk=bk, interpret=_INTERPRET)
+    return out[:, :, :sq, :]

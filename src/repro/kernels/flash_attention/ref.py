@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for tiled attention (causal / GQA / sliding window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True,
+              window: Optional[int] = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0.
+
+    window = w keeps keys with 0 <= row - col < w (plus causality).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / jnp.sqrt(D).astype(jnp.float32)
+    row = jnp.arange(Sq)[:, None]
+    col = jnp.arange(Sk)[None, :]
+    # decode-style alignment: query i attends to keys [0, Sk - Sq + i]
+    offs = Sk - Sq
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= col <= (row + offs)
+    if window is not None:
+        mask &= ((row + offs) - col) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

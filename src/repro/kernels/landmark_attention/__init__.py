@@ -1,0 +1,1 @@
+from repro.kernels.landmark_attention import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,27 @@
+"""Public jit'd wrapper for the fused landmark read."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.landmark_attention import kernel as _k
+from repro.kernels.landmark_attention import ref as _ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def landmark_read(Q: jnp.ndarray, k_land: jnp.ndarray, UV: jnp.ndarray,
+                  U1: jnp.ndarray, offset: jnp.ndarray,
+                  use_pallas: bool = True) -> jnp.ndarray:
+    """Attend Q (m, d) to a prebuilt LandmarkState -> (m, dv)."""
+    if not use_pallas:
+        return _ref.landmark_read(Q, k_land, UV, U1, offset)
+    m = Q.shape[0]
+    pad = (-m) % _k.BLOCK_Q
+    Qp = jnp.pad(Q, ((0, pad), (0, 0))) if pad else Q
+    out = _k.landmark_read_padded(Qp, k_land, UV, U1, offset,
+                                  interpret=_INTERPRET)
+    return out[:m]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused landmark-attention read.
+
+Given the context-side factors of the paper's fast model
+(k_land (c,d), UV = U(R̂V) (c,dv), U1 = U(R̂1) (c,)), the per-query read is
+
+    cvec = exp(q @ k_land^T / sqrt(d) - offset)      (m, c)
+    out  = (cvec @ UV) / max(cvec @ U1, eps)         (m, dv)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def landmark_read(Q: jnp.ndarray, k_land: jnp.ndarray, UV: jnp.ndarray,
+                  U1: jnp.ndarray, offset: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    d = Q.shape[-1]
+    inv_sqrt_d = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = (Q.astype(jnp.float32) @ k_land.astype(jnp.float32).T
+              ) * inv_sqrt_d - offset
+    cvec = jnp.exp(logits)
+    num = cvec @ UV.astype(jnp.float32)
+    den = jnp.maximum(cvec @ U1.astype(jnp.float32), eps)
+    return (num / den[:, None]).astype(Q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.rbf_sketch import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,69 @@
+"""Fused RBF kernel-block Pallas kernel (paper Fig. 1 memory trick, TPU-native).
+
+The paper's fast model only ever touches an ``n x c`` panel and an ``s x s``
+block of the kernel matrix.  On TPU we compute those blocks straight from the
+data ``X`` without staging the pairwise-distance matrix in HBM:
+
+  - the cross term ``Xr @ Xc^T`` runs on the MXU (f32 accumulation),
+  - ``exp(-gamma * max(|x_i|^2 + |x_j|^2 - 2 x_i.x_j, 0))`` runs on the VPU,
+  - output tiles are (block_r, block_c) = (128, 128) — MXU/lane aligned,
+  - the feature dimension d stays resident in VMEM per tile (d <= a few
+    thousand for the paper's datasets; the tile working set is
+    2*128*d + 128*128 floats, well under the ~16 MB v5e VMEM budget).
+
+HBM traffic is O((nr + nc) * d + nr * nc) instead of O(n^2 * d) for a full
+materialization — exactly the Table-3 "#Entries" story.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_R = 128
+BLOCK_C = 128
+
+
+def _rbf_block_kernel(xr_ref, xc_ref, o_ref, *, gamma: float):
+    """One (BLOCK_R, BLOCK_C) output tile.
+
+    xr_ref: (BLOCK_R, d) VMEM tile of row points
+    xc_ref: (BLOCK_C, d) VMEM tile of column points
+    o_ref:  (BLOCK_R, BLOCK_C) VMEM output tile
+    """
+    xr = xr_ref[...].astype(jnp.float32)
+    xc = xc_ref[...].astype(jnp.float32)
+    # MXU: cross inner products with f32 accumulation.
+    cross = jax.lax.dot_general(
+        xr, xc,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # VPU: norms, combine, exp.
+    rr = jnp.sum(xr * xr, axis=1, keepdims=True)          # (BLOCK_R, 1)
+    cc = jnp.sum(xc * xc, axis=1, keepdims=True)          # (BLOCK_C, 1)
+    sq = jnp.maximum(rr + cc.T - 2.0 * cross, 0.0)
+    o_ref[...] = jnp.exp(-gamma * sq)
+
+
+def rbf_block_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Pallas call over padded inputs; shapes must be multiples of the tiles."""
+    nr, d = Xr.shape
+    nc = Xc.shape[0]
+    assert nr % BLOCK_R == 0 and nc % BLOCK_C == 0, (nr, nc)
+    gamma = 1.0 / (2.0 * float(sigma) ** 2)
+    grid = (nr // BLOCK_R, nc // BLOCK_C)
+    return pl.pallas_call(
+        functools.partial(_rbf_block_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nr, nc), jnp.float32),
+        interpret=interpret,
+    )(Xr, Xc)

@@ -1,0 +1,49 @@
+"""Public jit'd wrapper for the fused RBF block kernel.
+
+Handles arbitrary (non-tile-aligned) shapes by zero-padding the point sets and
+slicing the output; padding rows produce garbage kernel values that are sliced
+away, never read.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rbf_sketch import kernel as _k
+from repro.kernels.rbf_sketch import ref as _ref
+
+# CPU containers interpret the TPU kernel; on real TPU set interpret=False.
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_rows(X: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = X.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return X
+    return jnp.pad(X, ((0, pad), (0, 0)))
+
+
+@partial(jax.jit, static_argnames=("sigma", "use_pallas"))
+def rbf_block(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float,
+              use_pallas: bool = True) -> jnp.ndarray:
+    """K-block exp(-|x_r - x_c|^2 / 2 sigma^2) of shape (len(Xr), len(Xc))."""
+    if not use_pallas:
+        return _ref.rbf_block(Xr, Xc, sigma)
+    nr, nc = Xr.shape[0], Xc.shape[0]
+    Xrp = _pad_rows(Xr, _k.BLOCK_R)
+    Xcp = _pad_rows(Xc, _k.BLOCK_C)
+    out = _k.rbf_block_padded(Xrp, Xcp, sigma, interpret=_INTERPRET)
+    return out[:nr, :nc]
+
+
+@partial(jax.jit, static_argnames=("sigma",))
+def sketched_gram(Xs: jnp.ndarray, sigma: float,
+                  scales: jnp.ndarray | None = None) -> jnp.ndarray:
+    """S^T K S for a column sketch S given the selected points Xs = X[idx]."""
+    blk = rbf_block(Xs, Xs, sigma)
+    if scales is not None:
+        blk = blk * (scales[:, None] * scales[None, :])
+    return blk

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused RBF block kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rbf_block(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    """K[ri, cj] = exp(-|x_ri - x_cj|^2 / (2 sigma^2)), f32 accumulation."""
+    Xr = Xr.astype(jnp.float32)
+    Xc = Xc.astype(jnp.float32)
+    rr = jnp.sum(Xr * Xr, axis=1)
+    cc = jnp.sum(Xc * Xc, axis=1)
+    sq = rr[:, None] + cc[None, :] - 2.0 * (Xr @ Xc.T)
+    sq = jnp.maximum(sq, 0.0)
+    gamma = 1.0 / (2.0 * sigma ** 2)
+    return jnp.exp(-gamma * sq)
+
+
+def sketched_gram(Xs: jnp.ndarray, sigma: float,
+                  scales: jnp.ndarray | None = None) -> jnp.ndarray:
+    """S^T K S for a column-selection sketch: rows Xs = X[S.indices]."""
+    blk = rbf_block(Xs, Xs, sigma)
+    if scales is not None:
+        blk = blk * (scales[:, None] * scales[None, :])
+    return blk

@@ -1,0 +1,219 @@
+"""Jittable step functions + shardings for one (arch, shape, mesh) cell.
+
+``build_cell`` is the single entry point the dry-run, trainer, and server
+share: given a ModelConfig, a ShapeConfig, and a mesh it returns the step
+function, the abstract inputs (ShapeDtypeStructs — no allocation), and the
+in/out shardings, ready for ``jax.jit(...).lower(...).compile()``.
+
+Step kinds:
+
+- train   : (params, opt_state, batch)            -> (params, opt_state, metrics)
+- prefill : (params, batch)                       -> (last_logits, cache)
+- decode  : (params, cache, tokens, pos)          -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig, config_for_shape, input_specs
+from repro.distributed import sharding as shd
+from repro.models.model import Model, build_model
+from repro.optim import make_optimizer, warmup_cosine
+
+WHISPER_DECODER_LEN = 448        # fixed decoder horizon (enc-dec decode cells)
+
+
+class Cell(NamedTuple):
+    cfg: ModelConfig
+    shape: ShapeConfig
+    model: Model
+    step_fn: Callable
+    abstract_args: tuple          # ShapeDtypeStructs, positional
+    in_shardings: tuple
+    out_shardings: Any
+    kind: str                     # train | prefill | decode
+
+
+def default_optimizer(cfg: ModelConfig):
+    """adafactor for the >=100B configs (HBM budget), adamw otherwise."""
+    if cfg.param_count() > 100e9:
+        return make_optimizer("adafactor", momentum=False)
+    return make_optimizer("adamw")
+
+
+def make_train_step(model: Model, opt, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10_000,
+                    accum: int = 1):
+    """One optimizer step; ``accum`` > 1 splits the global batch into
+    sequential microbatches (activation memory / accum at ~zero comm cost:
+    the gradient all-reduce still happens once, on the f32 accumulator)."""
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+
+            def mb(g_acc, b):
+                (_, met), g = grad_fn(params, b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return g_acc, met
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            g_sum, mets = jax.lax.scan(mb, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum, g_sum)
+            metrics = jax.tree.map(lambda m: jnp.mean(m), mets)
+        lr = warmup_cosine(opt_state.step, peak=peak_lr, warmup_steps=warmup,
+                           total_steps=total)
+        params, opt_state, om = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, {**metrics, **om, "lr": lr}
+    return train_step
+
+
+def default_accum(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    """Microbatch count so per-step activation temps fit ~8 GB/chip.
+
+    Empirically (yi-6b dry-run memory_analysis sweep) the rematted live set
+    is ~10x the naive bf16 block-input bound — f32 norm/softmax residuals at
+    scan boundaries — so the budget uses that calibrated factor.  ``accum``
+    is capped so each microbatch stays divisible by the DP axes (otherwise
+    the reshape inside the scan would force a resharding collective).
+    """
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    local_b = max(shape.global_batch // dp, 1)
+    layers = cfg.n_layers + (cfg.n_dec_layers if cfg.is_encdec else 0)
+    act = layers * local_b * shape.seq_len * cfg.d_model * 2 * 10
+    accum = 1
+    while act / accum > 8e9 and accum < local_b:
+        accum *= 2
+    return accum
+
+
+def _abstract_params(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _abstract_opt_state(opt, abstract_params):
+    return jax.eval_shape(lambda: opt.init(abstract_params))
+
+
+def _specs(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        tree)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+               opt=None, accum: Optional[int] = None) -> Cell:
+    """Assemble the jittable step + abstract args + shardings for a cell."""
+    cfg = config_for_shape(cfg, shape)
+    model = build_model(cfg)
+    aparams = _abstract_params(model)
+    psh = shd.param_shardings(aparams, mesh, fsdp=cfg.fsdp,
+                              moe_ep2d=cfg.moe_impl == "shard_map")
+    batch = input_specs(cfg, shape)
+    repl = shd.replicated(mesh)
+
+    if shape.kind == "train":
+        opt = opt or default_optimizer(cfg)
+        aopt = _abstract_opt_state(opt, aparams)
+        # optimizer state inherits param shardings leaf-for-leaf by path+shape
+        osh = _opt_shardings(aopt, aparams, psh, mesh)
+        bsh = shd.batch_shardings(batch, mesh)
+        step = make_train_step(
+            model, opt,
+            accum=accum if accum is not None
+            else default_accum(cfg, shape, mesh))
+        metrics_sh = repl
+        return Cell(cfg, shape, model, step,
+                    (aparams, aopt, batch),
+                    (psh, osh, bsh),
+                    (psh, osh, metrics_sh), "train")
+
+    if shape.kind == "prefill":
+        max_len = shape.seq_len
+        if cfg.is_encdec:
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, jax.random.PRNGKey(0),
+                                     WHISPER_DECODER_LEN)
+        else:
+            def prefill_step(params, batch):
+                return model.prefill(params, batch, jax.random.PRNGKey(0),
+                                     max_len)
+        bsh = shd.batch_shardings(batch, mesh)
+        acache = jax.eval_shape(prefill_step, aparams, batch)[1]
+        csh = shd.cache_shardings(acache, mesh)
+        lsh = shd.NamedSharding(
+            mesh, shd.batch_pspec((shape.global_batch, cfg.vocab_size), mesh))
+        return Cell(cfg, shape, model, prefill_step,
+                    (aparams, batch),
+                    (psh, bsh),
+                    (lsh, csh), "prefill")
+
+    # decode
+    B = shape.global_batch
+    if cfg.is_encdec:
+        acache = _specs(jax.eval_shape(
+            lambda: model.cache_shape(B, WHISPER_DECODER_LEN,
+                                      shape.seq_len)))
+    else:
+        acache = _specs(jax.eval_shape(
+            lambda: model.cache_shape(B, shape.seq_len)))
+    csh = shd.cache_shardings(acache, mesh)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    tsh = shd.NamedSharding(mesh, shd.batch_pspec((B, 1), mesh))
+    lsh = shd.NamedSharding(
+        mesh, shd.batch_pspec((B, cfg.vocab_size), mesh))
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return Cell(cfg, shape, model, decode_step,
+                (aparams, acache, tokens, pos),
+                (psh, csh, tsh, shd.replicated(mesh)),
+                (lsh, csh), "decode")
+
+
+def _opt_shardings(aopt, aparams, psh, mesh):
+    """Optimizer-state shardings: a state leaf whose path *suffix* matches a
+    parameter path and whose shape matches that parameter inherits the
+    parameter's sharding (so Adam's m/v are ZeRO-sharded exactly like the
+    weights); factored/scalar stats are replicated (tiny)."""
+    pinfo = {}
+    psh_flat = jax.tree_util.tree_flatten_with_path(psh)[0]
+    par_flat = jax.tree_util.tree_flatten_with_path(aparams)[0]
+    for (ppath, sh), (_, leaf) in zip(psh_flat, par_flat):
+        key = tuple(_key(k) for k in ppath)
+        pinfo[key] = (leaf.shape, sh)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(aopt)
+    out = []
+    for path, leaf in flat:
+        keys = tuple(_key(k) for k in path)
+        hit = None
+        for i in range(len(keys)):
+            cand = keys[i:]
+            info = pinfo.get(cand)
+            if info is not None and info[0] == leaf.shape:
+                hit = info[1]
+                break
+        out.append(hit if hit is not None else shd.replicated(mesh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _key(k):
+    return str(getattr(k, "key", getattr(k, "idx", k)))

@@ -1,0 +1,2 @@
+"""Composable LM substrate: layers, attention, MoE, recurrence, full models."""
+from repro.models.model import build_model, Model  # noqa: F401

@@ -1,0 +1,146 @@
+"""Shared layers: norms, embeddings, RoPE, MLP variants.
+
+Pure-function style: ``init_*`` returns a params pytree; ``apply`` functions
+take (params, x).  Sharding is attached *by name* via the rules in
+``repro.distributed.sharding`` — parameter path names here are load-bearing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}          # gemma-style (1+scale)
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, cfg: ModelConfig) -> dict:
+    # tied embeddings double as the unembed: std d^-1/2 keeps init-time
+    # logits O(1) (scale_embed restores O(1) input activations).
+    emb_std = cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+    p = {"embedding": dense_init(key, (cfg.vocab_size, cfg.d_model),
+                                 cfg.pdtype, scale=emb_std)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(jax.random.fold_in(key, 1),
+                                  (cfg.d_model, cfg.vocab_size), cfg.pdtype)
+    return p
+
+
+def embed(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = jnp.take(params["embedding"].astype(cfg.cdtype), tokens, axis=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype)
+    return x
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(cfg.cdtype).T
+    else:
+        w = params["unembed"].astype(cfg.cdtype)
+    logits = x @ w
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, D) with positions (S,) or (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)                       # (D/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = cfg.d_ff if d_ff is None else d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        return {"wi_gate": dense_init(k1, (d, ff), cfg.pdtype),
+                "wi_up": dense_init(k2, (d, ff), cfg.pdtype),
+                "wo": dense_init(k3, (ff, d), cfg.pdtype)}
+    return {"wi_up": dense_init(k2, (d, ff), cfg.pdtype),
+            "wo": dense_init(k3, (ff, d), cfg.pdtype)}
+
+
+def mlp(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.cdtype
+    up = x @ params["wi_up"].astype(dt)
+    if cfg.mlp_variant == "swiglu":
+        gate = jax.nn.silu(x @ params["wi_gate"].astype(dt))
+        h = gate * up
+    elif cfg.mlp_variant == "geglu":
+        gate = jax.nn.gelu(x @ params["wi_gate"].astype(dt), approximate=True)
+        h = gate * up
+    elif cfg.mlp_variant == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif cfg.mlp_variant == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(cfg.mlp_variant)
+    return h @ params["wo"].astype(dt)

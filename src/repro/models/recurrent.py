@@ -1,0 +1,323 @@
+"""Recurrent mixers: RG-LRU (recurrentgemma), mLSTM / sLSTM (xLSTM).
+
+All three expose the same triple of entry points used by transformer.py:
+
+- ``*_full(params, cfg, x)``              train/prefill over a full sequence
+- ``*_decode(params, cfg, x, state)``     one token, carrying state
+- ``init_*_state(cfg, batch)``            zero decode state
+
+Sub-quadratic by construction:
+- RG-LRU trains via ``jax.lax.associative_scan`` on the linear recurrence
+  h_t = a_t h_{t-1} + b_t  (O(S log S) elementwise, no S^2 anywhere);
+- mLSTM uses the stabilized *chunkwise* form — intra-chunk (L x L) masked
+  matmuls + inter-chunk scanned matrix state (O(S·L) + O(S/L) state GEMMs);
+- sLSTM is inherently sequential (scalar memory w/ recurrent gate mixing):
+  one fused ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ===========================================================================
+# RG-LRU block (Griffin recurrent block: gate branch ⊙ (conv -> RG-LRU))
+# ===========================================================================
+
+_RGLRU_C = 8.0
+
+
+def init_rglru(key: jax.Array, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    # Λ init so that a = exp(-c softplus Λ) spans ~(0.9, 0.999)
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))         # softplus^-1
+    return {
+        "w_gate": L.dense_init(ks[0], (d, w), cfg.pdtype),
+        "w_x": L.dense_init(ks[1], (d, w), cfg.pdtype),
+        "conv_k": L.dense_init(ks[2], (cfg.rglru_conv_width, w), cfg.pdtype,
+                               scale=cfg.rglru_conv_width ** -0.5),
+        "w_a": L.dense_init(ks[3], (w, w), cfg.pdtype),
+        "w_i": L.dense_init(ks[4], (w, w), cfg.pdtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": L.dense_init(ks[6], (w, d), cfg.pdtype),
+    }
+
+
+def _causal_conv_full(x: jnp.ndarray, kern: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: (B, S, w), kern: (K, w)."""
+    K = kern.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        out = out + xp[:, j:j + x.shape[1], :] * kern[j][None, None, :]
+    return out
+
+
+def _rglru_gates(params: dict, cfg: ModelConfig, u: jnp.ndarray):
+    """u: (..., w) post-conv input -> (log_a, b) of the recurrence."""
+    dt = cfg.cdtype
+    r = jax.nn.sigmoid(u @ params["w_a"].astype(dt)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ params["w_i"].astype(dt)).astype(jnp.float32)
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (
+        i * u.astype(jnp.float32))
+    return log_a, b
+
+
+def rglru_full(params: dict, cfg: ModelConfig,
+               x: jnp.ndarray) -> jnp.ndarray:
+    dt = cfg.cdtype
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt), approximate=True)
+    u = x @ params["w_x"].astype(dt)
+    u = _causal_conv_full(u, params["conv_k"].astype(dt))
+    log_a, b = _rglru_gates(params, cfg, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 + a2, jnp.exp(a2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    y = (h.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return y
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1, w),
+                              cfg.cdtype)}
+
+
+def rglru_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 state: dict) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d)."""
+    dt = cfg.cdtype
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_gate"].astype(dt), approximate=True)
+    u_new = xt @ params["w_x"].astype(dt)                    # (B, w)
+    hist = jnp.concatenate([state["conv"], u_new[:, None]], axis=1)  # (B,K,w)
+    kern = params["conv_k"].astype(dt)
+    u = jnp.einsum("bkw,kw->bw", hist, kern)
+    log_a, b = _rglru_gates(params, cfg, u)
+    h = jnp.exp(log_a) * state["h"] + b
+    y = (h.astype(dt) * gate) @ params["w_out"].astype(dt)
+    return y[:, None], {"h": h, "conv": hist[:, 1:]}
+
+
+# ===========================================================================
+# mLSTM (matrix memory, chunkwise-stabilized)
+# ===========================================================================
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": L.dense_init(ks[0], (d, h, hd), cfg.pdtype),
+        "wk": L.dense_init(ks[1], (d, h, hd), cfg.pdtype),
+        "wv": L.dense_init(ks[2], (d, h, hd), cfg.pdtype),
+        "wi": L.dense_init(ks[3], (d, h), jnp.float32),
+        "wf": L.dense_init(ks[4], (d, h), jnp.float32),
+        "bf": jnp.full((h,), 3.0, jnp.float32),              # open forget gate
+        "wog": L.dense_init(ks[5], (d, h, hd), cfg.pdtype),
+        "wo": L.dense_init(ks[6], (h, hd, d), cfg.pdtype),
+    }
+
+
+def _mlstm_proj(params: dict, cfg: ModelConfig, x: jnp.ndarray):
+    dt = cfg.cdtype
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt)) * (hd ** -0.5)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    li = (x.astype(jnp.float32) @ params["wi"])              # log input gate
+    lf = jax.nn.log_sigmoid(x.astype(jnp.float32) @ params["wf"]
+                            + params["bf"])                  # log forget
+    og = jax.nn.sigmoid(
+        jnp.einsum("bsd,dhk->bshk", x, params["wog"].astype(dt)))
+    return q, k, v, li, lf, og
+
+
+def mlstm_full(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    Lc = min(cfg.mlstm_chunk, S)
+    assert S % Lc == 0, (S, Lc)
+    nC = S // Lc
+    q, k, v, li, lf, og = _mlstm_proj(params, cfg, x)
+
+    def resh(t, extra):                                      # (B,S,...) chunks
+        return t.reshape((B, nC, Lc) + extra).swapaxes(0, 1)
+
+    qc = resh(q.astype(jnp.float32), (H, hd))
+    kc = resh(k.astype(jnp.float32), (H, hd))
+    vc = resh(v.astype(jnp.float32), (H, hd))
+    lic = resh(li, (H,))
+    lfc = resh(lf, (H,))
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    def chunk_step(carry, inp):
+        C_hat, n_hat, m_prev = carry
+        qch, kch, vch, lich, lfch = inp                      # (B,Lc,H,...)
+        b = jnp.cumsum(lfch, axis=1)                         # (B,Lc,H)
+        g = lich - b                                         # log source wts
+        gmax = jax.lax.cummax(g, axis=1)
+        m_i = b + jnp.maximum(m_prev[:, None], gmax)         # (B,Lc,H)
+        inter = jnp.exp(b + m_prev[:, None] - m_i)           # (B,Lc,H)
+        wsrc = jnp.exp(g - jnp.maximum(m_prev[:, None], gmax))  # (B,Lc,H)
+
+        # intra: D_ij = exp(b_i + g_j - m_i) for j<=i
+        Dij = jnp.exp(b[:, :, None] + g[:, None, :]
+                      - m_i[:, :, None])                     # (B,Lc,Lc,H)
+        tri = jnp.tril(jnp.ones((Lc, Lc), jnp.float32))
+        Dij = Dij * tri[None, :, :, None]
+        sij = jnp.einsum("blhk,bjhk->bljh", qch, kch) * Dij
+        intra_num = jnp.einsum("bljh,bjhk->blhk", sij, vch)
+        intra_den = jnp.sum(sij, axis=2)                     # (B,Lc,H)
+
+        inter_num = jnp.einsum("blhk,bhkv->blhv", qch, C_hat) * inter[..., None]
+        inter_den = jnp.einsum("blhk,bhk->blh", qch, n_hat) * inter
+
+        num = intra_num + inter_num
+        den = jnp.maximum(jnp.abs(intra_den + inter_den), jnp.exp(-m_i))
+        h = num / den[..., None]                             # (B,Lc,H,hd)
+
+        # state update to chunk end
+        bL = b[:, -1]                                        # (B,H)
+        m_new = m_i[:, -1]
+        decay = jnp.exp(bL + m_prev - m_new)
+        # exp(bL - b_j + li_j - m_new) = exp(bL + g_j - m_new)
+        src = jnp.exp(bL[:, None] + g - m_new[:, None])      # (B,Lc,H)
+        C_new = decay[:, :, None, None] * C_hat + jnp.einsum(
+            "bjh,bjhk,bjhv->bhkv", src, kch, vch)
+        n_new = decay[:, :, None] * n_hat + jnp.einsum(
+            "bjh,bjhk->bhk", src, kch)
+        return (C_new, n_new, m_new), h
+
+    if cfg.unroll_scans and nC <= 128:
+        carry, blocks = (C0, n0, m0), []
+        for i in range(nC):
+            carry, h = chunk_step(carry, (qc[i], kc[i], vc[i],
+                                          lic[i], lfc[i]))
+            blocks.append(h)
+        hs = jnp.stack(blocks)
+    else:
+        (_, _, _), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                     (qc, kc, vc, lic, lfc))
+    hs = hs.swapaxes(0, 1).reshape(B, S, H, hd)              # (B,S,H,hd)
+    out = hs.astype(cfg.cdtype) * og
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cfg.cdtype))
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    H, hd = cfg.n_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+def mlstm_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 state: dict) -> Tuple[jnp.ndarray, dict]:
+    q, k, v, li, lf, og = _mlstm_proj(params, cfg, x)        # S = 1
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    li, lf, og = li[:, 0], lf[:, 0], og[:, 0]
+    m_new = jnp.maximum(lf + state["m"], li)
+    decay = jnp.exp(lf + state["m"] - m_new)
+    src = jnp.exp(li - m_new)
+    C = decay[..., None, None] * state["C"] + src[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = decay[..., None] * state["n"] + src[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).astype(cfg.cdtype) * og
+    y = jnp.einsum("bhk,hkd->bd", h, params["wo"].astype(cfg.cdtype))
+    return y[:, None], {"C": C, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM (scalar memory, exponential gating, recurrent mixing)
+# ===========================================================================
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 9)
+    p = {}
+    for i, name in enumerate(("z", "i", "f", "o")):
+        p[f"w{name}"] = L.dense_init(ks[i], (d, h, hd), cfg.pdtype)
+        p[f"r{name}"] = L.dense_init(ks[4 + i], (h, hd, hd), cfg.pdtype,
+                                     scale=hd ** -0.5)
+    p["bf"] = jnp.full((h, hd), 3.0, jnp.float32)
+    p["wo_proj"] = L.dense_init(ks[8], (h, hd, d), cfg.pdtype)
+    return p
+
+
+def _slstm_step(params: dict, cfg: ModelConfig, xt_proj: dict, state: dict):
+    """One timestep. xt_proj: precomputed x projections (B,H,hd) per gate."""
+    dt = jnp.float32
+    h_prev = state["h"]
+
+    def rec(name):
+        return jnp.einsum("bhk,hkj->bhj", h_prev,
+                          params[f"r{name}"].astype(dt))
+
+    z = jnp.tanh(xt_proj["z"] + rec("z"))
+    li = xt_proj["i"] + rec("i")                             # log input gate
+    lf = jax.nn.log_sigmoid(xt_proj["f"] + rec("f")
+                            + params["bf"][None])            # log forget
+    o = jax.nn.sigmoid(xt_proj["o"] + rec("o"))
+    m_new = jnp.maximum(lf + state["m"], li)
+    i_s = jnp.exp(li - m_new)
+    f_s = jnp.exp(lf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * z
+    n = jnp.maximum(f_s * state["n"] + i_s, 1e-6)
+    h = o * (c / n)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_full(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    B, S, d = x.shape
+    proj = {name: jnp.einsum("bsd,dhk->bshk", x.astype(jnp.float32),
+                             params[f"w{name}"].astype(jnp.float32))
+            for name in ("z", "i", "f", "o")}
+    state = init_slstm_state(cfg, B)
+
+    def step(st, xs):
+        st2 = _slstm_step(params, cfg, xs, st)
+        return st2, st2["h"]
+
+    xs = {k: v.swapaxes(0, 1) for k, v in proj.items()}      # (S,B,H,hd)
+    _, hs = jax.lax.scan(step, state, xs)
+    hs = hs.swapaxes(0, 1)                                   # (B,S,H,hd)
+    return jnp.einsum("bshk,hkd->bsd", hs.astype(cfg.cdtype),
+                      params["wo_proj"].astype(cfg.cdtype))
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    H, hd = cfg.n_heads, cfg.head_dim
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z, "n": jnp.full_like(z, 1e-6), "h": z,
+            "m": jnp.full_like(z, -1e30)}
+
+
+def slstm_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 state: dict) -> Tuple[jnp.ndarray, dict]:
+    proj = {name: jnp.einsum("bd,dhk->bhk", x[:, 0].astype(jnp.float32),
+                             params[f"w{name}"].astype(jnp.float32))
+            for name in ("z", "i", "f", "o")}
+    st2 = _slstm_step(params, cfg, proj, state)
+    y = jnp.einsum("bhk,hkd->bd", st2["h"].astype(cfg.cdtype),
+                   params["wo_proj"].astype(cfg.cdtype))
+    return y[:, None], st2

@@ -1,0 +1,458 @@
+"""Block assembly: residual blocks, scanned stacks, decoder-only LM, enc-dec.
+
+A model is ``prefix blocks`` (unscanned, e.g. deepseek's first-3 dense) +
+``R`` scanned *superblocks* (one pass through cfg.layer_pattern) +
+``remainder blocks`` (pattern prefix, e.g. recurrentgemma's trailing 2).
+
+Every block kind exposes three modes:
+  train   : (x) -> (x', aux)
+  prefill : (x) -> (x', aux, cache_entry)   cache sized ``max_len``
+  decode  : (x, cache_entry, pos) -> (x', cache_entry')
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+
+
+ATTN_KINDS = ("attn", "local", "global")
+REC_KINDS = ("mlstm", "slstm", "rglru")
+
+
+def _is_moe_layer(cfg: ModelConfig, in_prefix: bool) -> bool:
+    return cfg.n_experts > 0 and not in_prefix
+
+
+def _has_mlp(cfg: ModelConfig, kind: str, moe: bool) -> bool:
+    if kind in ("mlstm", "slstm"):
+        return False                                         # xLSTM blocks
+    return moe or cfg.d_ff > 0 or cfg.dense_d_ff > 0
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str,
+               moe: bool, dense_ff: Optional[int] = None) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": L.init_rmsnorm(cfg.d_model, cfg.pdtype)}
+    if kind in ATTN_KINDS:
+        p["mixer"] = A.init_attention(k1, cfg)
+    elif kind == "mlstm":
+        p["mixer"] = R.init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        p["mixer"] = R.init_slstm(k1, cfg)
+    elif kind == "rglru":
+        p["mixer"] = R.init_rglru(k1, cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        p["post_norm1"] = L.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    if _has_mlp(cfg, kind, moe):
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, cfg.pdtype)
+        if moe:
+            p["moe"] = M.init_moe(k2, cfg)
+        else:
+            p["mlp"] = L.init_mlp(k3, cfg, d_ff=dense_ff)
+        if cfg.post_norm:
+            p["post_norm2"] = L.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    return p
+
+
+def _mixer_full(params: dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                positions: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    if kind in ATTN_KINDS:
+        if not causal:
+            return _encoder_attention(params, cfg, x, positions)
+        return A.attention_full(params, cfg, x, positions, kind)
+    if kind == "mlstm":
+        return R.mlstm_full(params, cfg, x)
+    if kind == "slstm":
+        return R.slstm_full(params, cfg, x)
+    return R.rglru_full(params, cfg, x)
+
+
+def _encoder_attention(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                       positions: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional self-attention (whisper encoder)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as shd
+    sp = A._sp_active(cfg, x.shape[1])
+    if sp:
+        x = shd.constrain(x, P(None, "model", None))
+    q, k, v = A._qkv(params, cfg, x, positions, cfg.rope_theta)
+    out = A._sdpa(q, k, v, cfg, causal=False)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cfg.cdtype))
+    if sp:
+        y = shd.constrain(y, P(None, "model", None))
+    return y
+
+
+def block_full(params: dict, cfg: ModelConfig, kind: str, moe: bool,
+               x: jnp.ndarray, positions: jnp.ndarray,
+               causal: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    h = _mixer_full(params["mixer"], cfg, kind,
+                    L.rmsnorm(params["norm1"], x, cfg.norm_eps),
+                    positions, causal)
+    if cfg.post_norm:
+        h = L.rmsnorm(params["post_norm1"], h, cfg.norm_eps)
+    h = checkpoint_name(h, "mixer_out")
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if "mlp" in params or "moe" in params:
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if "moe" in params:
+            h, aux = M.moe_ffn(params["moe"], cfg, h)
+        else:
+            h = L.mlp(params["mlp"], cfg, h)
+        if cfg.post_norm:
+            h = L.rmsnorm(params["post_norm2"], h, cfg.norm_eps)
+        h = checkpoint_name(h, "mlp_out")
+        x = x + h
+    return x, aux
+
+
+# --- prefill: block_full + cache construction ------------------------------
+
+def block_prefill(params: dict, cfg: ModelConfig, kind: str, moe: bool,
+                  x: jnp.ndarray, positions: jnp.ndarray, max_len: int,
+                  key: jax.Array) -> Tuple[jnp.ndarray, dict]:
+    """Returns (x', cache_entry). Shares compute structure with block_full."""
+    B, S, _ = x.shape
+    xin = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        cache = _attn_prefill_cache(params["mixer"], cfg, kind, xin,
+                                    positions, max_len, key)
+        h = A.attention_full(params["mixer"], cfg, xin, positions, kind)
+    elif kind == "mlstm":
+        h = R.mlstm_full(params["mixer"], cfg, xin)
+        cache = _rec_prefill_state(params["mixer"], cfg, kind, xin)
+    elif kind == "slstm":
+        h = R.slstm_full(params["mixer"], cfg, xin)
+        cache = _rec_prefill_state(params["mixer"], cfg, kind, xin)
+    else:
+        h = R.rglru_full(params["mixer"], cfg, xin)
+        cache = _rec_prefill_state(params["mixer"], cfg, kind, xin)
+    if cfg.post_norm:
+        h = L.rmsnorm(params["post_norm1"], h, cfg.norm_eps)
+    x = x + h
+    if "mlp" in params or "moe" in params:
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if "moe" in params:
+            h, _ = M.moe_ffn(params["moe"], cfg, h)
+        else:
+            h = L.mlp(params["mlp"], cfg, h)
+        if cfg.post_norm:
+            h = L.rmsnorm(params["post_norm2"], h, cfg.norm_eps)
+        x = x + h
+    return x, cache
+
+
+def _attn_prefill_cache(mp: dict, cfg: ModelConfig, kind: str,
+                        xin: jnp.ndarray, positions: jnp.ndarray,
+                        max_len: int, key: jax.Array) -> dict:
+    B, S, _ = xin.shape
+    dt = cfg.cdtype
+    if cfg.use_mla:
+        kv_a = xin @ mp["wkv_a"].astype(dt)
+        ckv = L.rmsnorm(mp["kv_norm"], kv_a[..., :cfg.kv_lora_rank],
+                        cfg.norm_eps)
+        krope = L.apply_rope(
+            kv_a[..., None, cfg.kv_lora_rank:].swapaxes(1, 2), positions,
+            cfg.rope_theta).swapaxes(1, 2)[:, :, 0]
+        pad = max_len - S
+        return {"ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))),
+                "krope": jnp.pad(krope, ((0, 0), (0, pad), (0, 0)))}
+    theta = cfg.rope_theta_local if kind == "local" else cfg.rope_theta
+    _, k, v = A._qkv(mp, cfg, xin, positions, theta)         # (B,S,KV,D)
+    if kind == "global" and cfg.use_landmark_decode:
+        return A.build_landmark_cache(mp, cfg, k, v, key)
+    if kind == "local" and cfg.window is not None:
+        W = min(cfg.window, max_len)
+        j = jnp.arange(W)
+        src = jnp.maximum(S - W, 0) + j                      # last W positions
+        src = jnp.clip(src, 0, S - 1)
+        slots = src % W
+        kw = jnp.take(k, src, axis=1)
+        vw = jnp.take(v, src, axis=1)
+        kr = jnp.zeros((B, W) + k.shape[2:], k.dtype).at[:, slots].set(kw)
+        vr = jnp.zeros((B, W) + v.shape[2:], v.dtype).at[:, slots].set(vw)
+        return {"k": kr, "v": vr}
+    pad = max_len - S
+    return {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+
+
+def _rec_prefill_state(mp: dict, cfg: ModelConfig, kind: str,
+                       xin: jnp.ndarray) -> dict:
+    """Recompute the final recurrent state by a decode-scan over the input.
+
+    O(S) like the parallel pass; keeps the *_full implementations scan-free.
+    """
+    B = xin.shape[0]
+    if kind == "mlstm":
+        state = R.init_mlstm_state(cfg, B)
+        step = functools.partial(R.mlstm_decode, mp, cfg)
+    elif kind == "slstm":
+        state = R.init_slstm_state(cfg, B)
+        step = functools.partial(R.slstm_decode, mp, cfg)
+    else:
+        state = R.init_rglru_state(cfg, B)
+        step = functools.partial(R.rglru_decode, mp, cfg)
+
+    def body(st, xt):
+        _, st2 = step(xt[:, None], st)
+        return st2, None
+
+    st, _ = jax.lax.scan(body, state, xin.swapaxes(0, 1))
+    return st
+
+
+# --- decode ----------------------------------------------------------------
+
+def block_decode(params: dict, cfg: ModelConfig, kind: str, moe: bool,
+                 x: jnp.ndarray, cache: dict,
+                 pos: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    xin = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        h, cache = A.attention_decode(params["mixer"], cfg, xin, cache,
+                                      pos, kind)
+    elif kind == "mlstm":
+        h, cache = R.mlstm_decode(params["mixer"], cfg, xin, cache)
+    elif kind == "slstm":
+        h, cache = R.slstm_decode(params["mixer"], cfg, xin, cache)
+    else:
+        h, cache = R.rglru_decode(params["mixer"], cfg, xin, cache)
+    if cfg.post_norm:
+        h = L.rmsnorm(params["post_norm1"], h, cfg.norm_eps)
+    x = x + h
+    if "mlp" in params or "moe" in params:
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if "moe" in params:
+            h, _ = M.moe_ffn(params["moe"], cfg, h)
+        else:
+            h = L.mlp(params["mlp"], cfg, h)
+        if cfg.post_norm:
+            h = L.rmsnorm(params["post_norm2"], h, cfg.norm_eps)
+        x = x + h
+    return x, cache
+
+
+def block_cache_shape(cfg: ModelConfig, kind: str, batch: int,
+                      max_len: int):
+    """eval_shape-able zero cache for one block (decode dry-run)."""
+    if kind in ATTN_KINDS:
+        return A.init_cache(cfg, kind, batch, max_len)
+    if kind == "mlstm":
+        return R.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return R.init_slstm_state(cfg, batch)
+    return R.init_rglru_state(cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# stacks (prefix + scanned superblocks + remainder)
+# ---------------------------------------------------------------------------
+
+def stack_layout(cfg: ModelConfig):
+    """-> (prefix_kinds, pattern, n_repeats, remainder_kinds)."""
+    pattern = tuple(cfg.layer_pattern)
+    prefix = tuple(pattern[i % len(pattern)]
+                   for i in range(cfg.first_k_dense))
+    n_rest = cfg.n_layers - cfg.first_k_dense
+    reps = n_rest // len(pattern)
+    remainder = pattern[: n_rest % len(pattern)]
+    return prefix, pattern, reps, remainder
+
+
+def init_stack(key: jax.Array, cfg: ModelConfig) -> dict:
+    prefix, pattern, reps, remainder = stack_layout(cfg)
+    kp, ks, kr = jax.random.split(key, 3)
+    params = {}
+    params["prefix"] = tuple(
+        init_block(jax.random.fold_in(kp, i), cfg, kind, moe=False,
+                   dense_ff=cfg.dense_d_ff or None)
+        for i, kind in enumerate(prefix))
+
+    def init_super(k):
+        kk = jax.random.split(k, len(pattern))
+        return tuple(init_block(kk[i], cfg, kind,
+                                moe=_is_moe_layer(cfg, False))
+                     for i, kind in enumerate(pattern))
+
+    if reps > 0:
+        if cfg.scan_layers:
+            keys = jax.random.split(ks, reps)
+            params["scanned"] = jax.vmap(init_super)(keys)
+        else:
+            params["scanned"] = [init_super(jax.random.fold_in(ks, i))
+                                 for i in range(reps)]
+    else:
+        params["scanned"] = ()
+    params["remainder"] = tuple(
+        init_block(jax.random.fold_in(kr, i), cfg, kind,
+                   moe=_is_moe_layer(cfg, False))
+        for i, kind in enumerate(remainder))
+    return params
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if cfg.remat == "save_io":
+        # collective-aware remat: save the post-all-reduce mixer/mlp outputs
+        # so the backward recompute does not re-run the forward TP
+        # all-reduces (6/layer -> 4/layer AR volume) at the cost of two
+        # bf16 (B_micro, S, d) residuals per layer
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "mixer_out", "mlp_out"))
+    return jax.checkpoint(fn)
+
+
+def stack_full(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+               positions: jnp.ndarray, causal: bool = True):
+    """Train-mode stack. Returns (x, aux_sum)."""
+    prefix, pattern, reps, remainder = stack_layout(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    for p, kind in zip(params["prefix"], prefix):
+        x, a = block_full(p, cfg, kind, False, x, positions, causal)
+        aux = aux + a
+
+    def super_body(carry, sb_params):
+        h, ax = carry
+        for i, kind in enumerate(pattern):
+            h, a = block_full(sb_params[i], cfg, kind,
+                              _is_moe_layer(cfg, False), h, positions, causal)
+            ax = ax + a
+        return (h, ax), None
+
+    if reps > 0:
+        body = _remat(cfg, super_body)
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["scanned"])
+        else:
+            # unrolled path: same remat policy so the dry-run's layer-count
+            # extrapolation (dryrun.py) measures the true per-layer cost
+            for sb in params["scanned"]:
+                (x, aux), _ = body((x, aux), sb)
+
+    for p, kind in zip(params["remainder"], remainder):
+        x, a = block_full(p, cfg, kind, _is_moe_layer(cfg, False), x,
+                          positions, causal)
+        aux = aux + a
+    return x, aux
+
+
+def stack_prefill(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                  positions: jnp.ndarray, max_len: int, key: jax.Array):
+    prefix, pattern, reps, remainder = stack_layout(cfg)
+    caches = {"prefix": [], "scanned": None, "remainder": []}
+    for i, (p, kind) in enumerate(zip(params["prefix"], prefix)):
+        x, c = block_prefill(p, cfg, kind, False, x, positions, max_len,
+                             jax.random.fold_in(key, 1000 + i))
+        caches["prefix"].append(c)
+
+    def super_body(h, xs):
+        sb_params, kd = xs
+        kk = jax.random.wrap_key_data(kd)
+        cs = []
+        for i, kind in enumerate(pattern):
+            h, c = block_prefill(sb_params[i], cfg, kind,
+                                 _is_moe_layer(cfg, False), h, positions,
+                                 max_len, jax.random.fold_in(kk, i))
+            cs.append(c)
+        return h, tuple(cs)
+
+    if reps > 0:
+        keys = jax.random.key_data(jax.random.split(key, reps))
+        if cfg.scan_layers:
+            x, sc = jax.lax.scan(super_body, x, (params["scanned"], keys))
+        else:
+            sc_list = []
+            for i, sb in enumerate(params["scanned"]):
+                x, c = super_body(x, (sb, keys[i]))
+                sc_list.append(c)
+            sc = jax.tree.map(lambda *xs: jnp.stack(xs), *sc_list)
+        caches["scanned"] = sc
+
+    for i, (p, kind) in enumerate(zip(params["remainder"], remainder)):
+        x, c = block_prefill(p, cfg, kind, _is_moe_layer(cfg, False), x,
+                             positions, max_len,
+                             jax.random.fold_in(key, 2000 + i))
+        caches["remainder"].append(c)
+    caches["prefix"] = tuple(caches["prefix"])
+    caches["remainder"] = tuple(caches["remainder"])
+    return x, caches
+
+
+def stack_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 caches: dict, pos: jnp.ndarray):
+    prefix, pattern, reps, remainder = stack_layout(cfg)
+    new_prefix = []
+    for p, kind, c in zip(params["prefix"], prefix, caches["prefix"]):
+        x, c2 = block_decode(p, cfg, kind, False, x, c, pos)
+        new_prefix.append(c2)
+
+    def super_body(h, xs):
+        sb_params, sb_cache = xs
+        cs = []
+        for i, kind in enumerate(pattern):
+            h, c2 = block_decode(sb_params[i], cfg, kind,
+                                 _is_moe_layer(cfg, False), h, sb_cache[i],
+                                 pos)
+            cs.append(c2)
+        return h, tuple(cs)
+
+    new_scanned = caches.get("scanned")
+    if reps > 0:
+        if cfg.scan_layers:
+            x, new_scanned = jax.lax.scan(
+                super_body, x, (params["scanned"], caches["scanned"]))
+        else:
+            outs = []
+            for i, sb in enumerate(params["scanned"]):
+                sb_cache = jax.tree.map(lambda t: t[i], caches["scanned"])
+                x, c2 = super_body(x, (sb, sb_cache))
+                outs.append(c2)
+            new_scanned = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    new_rem = []
+    for p, kind, c in zip(params["remainder"], remainder,
+                          caches["remainder"]):
+        x, c2 = block_decode(p, cfg, kind, _is_moe_layer(cfg, False), x, c,
+                             pos)
+        new_rem.append(c2)
+    return x, {"prefix": tuple(new_prefix), "scanned": new_scanned,
+               "remainder": tuple(new_rem)}
+
+
+def stack_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    prefix, pattern, reps, remainder = stack_layout(cfg)
+    cache = {
+        "prefix": tuple(block_cache_shape(cfg, kind, batch, max_len)
+                        for kind in prefix),
+        "remainder": tuple(block_cache_shape(cfg, kind, batch, max_len)
+                           for kind in remainder),
+        "scanned": None,
+    }
+    if reps > 0:
+        one = tuple(block_cache_shape(cfg, kind, batch, max_len)
+                    for kind in pattern)
+        cache["scanned"] = jax.tree.map(
+            lambda t: jnp.zeros((reps,) + t.shape, t.dtype), one)
+    return cache

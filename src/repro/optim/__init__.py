@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    Optimizer,
+    adafactor,
+    adamw,
+    lion,
+    make_optimizer,
+)
+from repro.optim.schedule import warmup_cosine, warmup_linear  # noqa: F401
+from repro.optim.compress import (  # noqa: F401
+    CompressorState,
+    countsketch_compress,
+    countsketch_decompress,
+    make_gradient_compressor,
+)

@@ -1,0 +1,227 @@
+"""Optimizers as pure (init, update) pairs over pytrees.
+
+- ``adamw``     : decoupled weight decay, f32 moments, global-norm clipping.
+- ``adafactor`` : factored second moment + optional bf16 first moment — the
+                  memory-frugal choice for the ≥100B configs (deepseek-v3),
+                  where full Adam state (8 bytes/param) cannot fit v5e HBM.
+- ``lion``      : sign-momentum; 4 bytes/param state.
+
+States inherit the parameter PartitionSpecs leaf-for-leaf (ZeRO-style when
+``fsdp`` shards params over 'data'), so ``distributed.param_shardings`` is
+reused for the optimizer state as-is.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Any                      # per-optimizer pytree (m, v, ...)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jnp.ndarray], tuple]
+    # update(grads, state, params, lr) -> (new_params, new_state, metrics)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale), tree), gn
+
+
+def _is_matrix(x) -> bool:
+    return x.ndim >= 2 and min(x.shape[-2:]) >= 2
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0
+          ) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        inner={"m": jax.tree.map(zeros, params),
+                               "v": jax.tree.map(zeros, params)})
+
+    def update(grads, state, params, lr):
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        else:
+            gn = global_norm(grads)
+        t = state.step + 1
+        tf = t.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** tf
+        bc2 = 1.0 - b2 ** tf
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            step = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            p32 = p.astype(jnp.float32)
+            p2 = p32 - lr * (step + weight_decay * p32)
+            return p2.astype(p.dtype), m2, v2
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.inner["m"])
+        flat_v = treedef.flatten_up_to(state.inner["v"])
+        res = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        unf = treedef.unflatten
+        return (unf([r[0] for r in res]),
+                OptState(step=t, inner={"m": unf([r[1] for r in res]),
+                                        "v": unf([r[2] for r in res])}),
+                {"grad_norm": gn})
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v; optional bf16 momentum)
+# ---------------------------------------------------------------------------
+
+def adafactor(weight_decay: float = 0.0, eps: float = 1e-30,
+              clip_norm: Optional[float] = 1.0, momentum: bool = False,
+              decay: float = 0.8) -> Optimizer:
+    """Factored second moment over the trailing two dims of each matrix.
+
+    State per matrix param (..., r, c): row stats (..., r) + col stats
+    (..., c) — ~0 bytes/param vs Adam's 8.
+    """
+    def init(params):
+        def stats(p):
+            if _is_matrix(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        inner = {"stats": jax.tree.map(stats, params,
+                                       is_leaf=lambda x: hasattr(x, "shape"))}
+        if momentum:
+            inner["m"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        return OptState(step=jnp.zeros((), jnp.int32), inner=inner)
+
+    def update(grads, state, params, lr):
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        else:
+            gn = global_norm(grads)
+        t = state.step + 1
+        beta2 = 1.0 - (t.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, st, m):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _is_matrix(p):
+                r = beta2 * st["r"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                c = beta2 * st["c"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r[..., :, None] * c[..., None, :]) \
+                    / jnp.maximum(rmean[..., None], eps)
+                new_st = {"r": r, "c": c}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                vhat = v
+                new_st = {"v": v}
+            u = g / jnp.sqrt(jnp.maximum(vhat, eps))
+            # update clipping (Shazeer & Stern): RMS(u) <= 1
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            if m is not None:
+                m2 = 0.9 * m.astype(jnp.float32) + 0.1 * u
+                u = m2
+                m_out = m2.astype(jnp.bfloat16)
+            else:
+                m_out = None
+            p32 = p.astype(jnp.float32)
+            p2 = p32 - lr * (u + weight_decay * p32)
+            return p2.astype(p.dtype), new_st, m_out
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_st = treedef.flatten_up_to(state.inner["stats"])
+        flat_m = treedef.flatten_up_to(state.inner["m"]) if momentum \
+            else [None] * len(flat_p)
+        res = [upd(p, g, st, m)
+               for p, g, st, m in zip(flat_p, flat_g, flat_st, flat_m)]
+        unf = treedef.unflatten
+        inner = {"stats": unf([r[1] for r in res])}
+        if momentum:
+            inner["m"] = unf([r[2] for r in res])
+        return (unf([r[0] for r in res]),
+                OptState(step=t, inner=inner), {"grad_norm": gn})
+
+    return Optimizer("adafactor", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Lion
+# ---------------------------------------------------------------------------
+
+def lion(b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1,
+         clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            inner={"m": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)})
+
+    def update(grads, state, params, lr):
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        else:
+            gn = global_norm(grads)
+
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            p32 = p.astype(jnp.float32)
+            u = jnp.sign(b1 * m + (1 - b1) * g)
+            p2 = p32 - lr * (u + weight_decay * p32)
+            m2 = b2 * m + (1 - b2) * g
+            return p2.astype(p.dtype), m2
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state.inner["m"])
+        res = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+        unf = treedef.unflatten
+        return (unf([r[0] for r in res]),
+                OptState(step=state.step + 1,
+                         inner={"m": unf([r[1] for r in res])}),
+                {"grad_norm": gn})
+
+    return Optimizer("lion", init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    if name == "lion":
+        return lion(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,22 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def warmup_linear(step, *, peak: float, warmup_steps: int, total_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    lin = peak * (1.0 - jnp.clip(t, 0.0, 1.0))
+    return jnp.where(step < warmup_steps, warm, lin)

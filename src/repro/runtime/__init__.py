@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    ElasticPlan,
+    HeartbeatMonitor,
+    PreemptionHandler,
+    StragglerDetector,
+    plan_elastic_remesh,
+)

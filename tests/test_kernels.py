@@ -1,0 +1,131 @@
+"""Per-Pallas-kernel shape/dtype sweeps against the pure-jnp ref oracles
+(interpret mode on CPU; the kernels themselves target TPU BlockSpecs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.landmark_attention import ops as lm_ops, ref as lm_ref
+from repro.kernels.rbf_sketch import ops as rbf_ops, ref as rbf_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,Sq,Sk,D", [
+    (1, 4, 4, 128, 128, 64),      # MHA square
+    (2, 8, 2, 128, 128, 32),      # GQA 4:1
+    (1, 4, 1, 256, 256, 64),      # MQA
+    (2, 4, 2, 100, 100, 32),      # non-multiple seq (padding path)
+    (1, 2, 2, 1, 256, 64),        # decode: Sq=1 right-aligned
+    (1, 4, 2, 64, 256, 32),       # chunked prefill continuation
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_ref(B, Hq, Hkv, Sq, Sk, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(ks[0], (B, Hq, Sq, D)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, Hkv, Sk, D)) * 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, Sk, D)).astype(dtype)
+    out = fa_ops.flash_attention(q, k, v, causal=True)
+    ref = fa_ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [16, 64, 200])
+def test_flash_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 32)) * 0.5
+    k = jax.random.normal(ks[1], (1, 2, 256, 32)) * 0.5
+    v = jax.random.normal(ks[2], (1, 2, 256, 32))
+    out = fa_ops.flash_attention(q, k, v, causal=True, window=window)
+    ref = fa_ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_flash_block_shapes():
+    """block sizes sweep (VMEM tiling knobs)."""
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 2, 512, 64)) * 0.5
+    k = jax.random.normal(ks[1], (1, 2, 512, 64)) * 0.5
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    ref = fa_ref.attention(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 256), (256, 128)]:
+        out = fa_ops.flash_attention(q, k, v, causal=True, block_q=bq,
+                                     block_k=bk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# landmark (fast-SPSD) read
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,c,d,dv", [
+    (128, 16, 64, 64), (200, 32, 32, 16), (64, 8, 128, 128), (1, 16, 64, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_landmark_read_vs_ref(m, c, d, dv, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    Q = (jax.random.normal(ks[0], (m, d)) * 0.5).astype(dtype)
+    kl = (jax.random.normal(ks[1], (c, d)) * 0.5).astype(dtype)
+    UV = jax.random.normal(ks[2], (c, dv)).astype(dtype)
+    U1 = jnp.abs(jax.random.normal(ks[3], (c,))) + 0.5
+    off = jnp.asarray(0.3)
+    out = lm_ops.landmark_read(Q, kl, UV, U1, off)
+    ref = lm_ref.landmark_read(Q, kl, UV, U1, off)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused RBF sketch blocks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nr,nc,d", [(128, 128, 16), (96, 64, 8),
+                                     (200, 50, 32), (17, 33, 4)])
+@pytest.mark.parametrize("sigma", [0.5, 2.0])
+def test_rbf_block_vs_ref(nr, nc, d, sigma):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    X = jax.random.normal(ks[0], (nr, d))
+    Y = jax.random.normal(ks[1], (nc, d))
+    out = rbf_ops.rbf_block(X, Y, sigma)
+    ref = rbf_ref.rbf_block(X, Y, sigma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_rbf_block_diag_is_one():
+    X = jax.random.normal(jax.random.PRNGKey(5), (64, 8))
+    K = rbf_ops.rbf_block(X, X, 1.3)
+    np.testing.assert_allclose(np.asarray(jnp.diagonal(K)), 1.0, atol=1e-4)
+
+
+def test_sketched_gram_vs_ref():
+    X = jax.random.normal(jax.random.PRNGKey(6), (150, 12))
+    g1 = rbf_ops.sketched_gram(X, 1.1)
+    g2 = rbf_ref.sketched_gram(X, 1.1)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=2e-4,
+                               atol=2e-4)
+    # SPSD check
+    ev = np.linalg.eigvalsh(np.asarray(g2, np.float64))
+    assert ev.min() > -1e-4
+
+
+def test_rbf_kernel_operator_uses_pallas_path():
+    """RBFKernel(use_pallas=True) must agree with the jnp path."""
+    from repro.core.kernelop import RBFKernel
+    X = jax.random.normal(jax.random.PRNGKey(7), (100, 10))
+    idx = jnp.arange(20)
+    a = RBFKernel(X, sigma=1.7, use_pallas=False).block(idx, idx + 5)
+    b = RBFKernel(X, sigma=1.7, use_pallas=True).block(idx, idx + 5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=2e-4)

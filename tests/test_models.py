@@ -1,0 +1,207 @@
+"""Per-arch smoke tests (reduced configs) + decode-path consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+import repro.models.attention as A
+
+
+def _batch_for(cfg, key, B=2, S=64):
+    if cfg.is_encdec:
+        toks = jax.random.randint(key, (B, 8), 0, cfg.vocab_size)
+        return {"frames": jax.random.normal(key, (B, S, cfg.frontend_dim)),
+                "tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    if cfg.family == "vlm":
+        toks = jax.random.randint(key, (B, 300), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, 1),
+                "patches": jax.random.normal(
+                    key, (B, 256, cfg.d_model)).astype(cfg.cdtype)}
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+
+    loss, metrics = jax.jit(m.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert float(loss) > 0
+
+    logits, _ = m.forward(params, batch)
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    # one gradient step moves the loss
+    grads = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    cfg = get_smoke(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    key = jax.random.PRNGKey(2)
+    if cfg.is_encdec:
+        batch = {"frames": jax.random.normal(key, (B, 32, cfg.frontend_dim)),
+                 "tokens": jnp.ones((B, 1), jnp.int32)}
+    else:
+        batch = {"tokens": jax.random.randint(key, (B, S), 0,
+                                              cfg.vocab_size)}
+    logits, cache = m.prefill(params, batch, jax.random.PRNGKey(3), 32)
+    assert logits.shape == (B, cfg.vocab_size)
+    pos = jnp.asarray(1 if cfg.is_encdec else S, jnp.int32)
+    lg2, cache = m.decode_step(params, cache,
+                               jnp.ones((B, 1), jnp.int32), pos)
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(lg2.astype(jnp.float32)))), arch
+
+
+# ---------------------------------------------------------------------------
+# decode == teacher-forced forward (the KV-cache correctness invariant)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pattern,window", [
+    (("attn",), None),
+    (("local", "global"), 8),
+])
+def test_decode_matches_forward(pattern, window):
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=128, layer_pattern=pattern, window=window,
+                      dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, 128)
+
+    full_logits, _ = m.forward(params, {"tokens": toks})
+
+    npre = 8
+    _, cache = m.prefill(params, {"tokens": toks[:, :npre]},
+                         jax.random.PRNGKey(2), S)
+    outs = []
+    for t in range(npre, S):
+        lg, cache = m.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.asarray(t, jnp.int32))
+        outs.append(lg)
+    # decode_step at position t sees tokens[:, :t+1]; compare to forward
+    for i, t in enumerate(range(npre, S)):
+        np.testing.assert_allclose(
+            np.asarray(outs[i]), np.asarray(full_logits[:, t]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_mla_decode_matches_forward():
+    cfg = ModelConfig(name="t", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                      vocab_size=128, dtype="float32",
+                      use_mla=True, q_lora_rank=32, kv_lora_rank=32,
+                      qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, 128)
+    full_logits, _ = m.forward(params, {"tokens": toks})
+    _, cache = m.prefill(params, {"tokens": toks[:, :4]},
+                         jax.random.PRNGKey(2), S)
+    for t in range(4, S):
+        lg, cache = m.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_mla_absorb_matches_materialized():
+    """Absorbed (latent) MLA decode == materializing K/V then attending."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                      vocab_size=128, dtype="float32",
+                      use_mla=True, q_lora_rank=32, kv_lora_rank=32,
+                      qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+    cfg2 = dataclasses.replace(cfg, mla_absorb=False)
+    m, m2 = build_model(cfg), build_model(cfg2)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, 128)
+    _, c1 = m.prefill(params, {"tokens": toks}, jax.random.PRNGKey(2), 16)
+    _, c2 = m2.prefill(params, {"tokens": toks}, jax.random.PRNGKey(2), 16)
+    l1, _ = m.decode_step(params, c1, toks[:, :1], jnp.asarray(10, jnp.int32))
+    l2, _ = m2.decode_step(params, c2, toks[:, :1],
+                           jnp.asarray(10, jnp.int32))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_recurrent_decode_matches_full():
+    """rglru / mlstm / slstm decode states reproduce the full pass."""
+    cfg = ModelConfig(name="t", family="hybrid", n_layers=3, d_model=32,
+                      n_heads=2, n_kv_heads=1, head_dim=16, d_ff=64,
+                      vocab_size=64, dtype="float32",
+                      layer_pattern=("rglru", "mlstm", "slstm"),
+                      window=8, lru_width=32, mlstm_chunk=4)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, 64)
+    full_logits, _ = m.forward(params, {"tokens": toks})
+    _, cache = m.prefill(params, {"tokens": toks[:, :4]},
+                         jax.random.PRNGKey(2), S)
+    for t in range(4, S):
+        lg, cache = m.decode_step(params, cache, toks[:, t:t + 1],
+                                  jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(full_logits[:, t]),
+                                   rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention internal consistency
+# ---------------------------------------------------------------------------
+
+def test_chunked_equals_dense_sdpa():
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=64, dtype="float32")
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    S = 4096                               # > DENSE_LIMIT -> chunked
+    q = jax.random.normal(ks[0], (1, S, 4, 32)) * 0.3
+    k = jax.random.normal(ks[1], (1, S, 2, 32)) * 0.3
+    v = jax.random.normal(ks[2], (1, S, 2, 32))
+    chunked = A._sdpa(q, k, v, cfg, causal=True)
+    rows = jnp.arange(S)
+    dense = A._blk_attend(
+        jnp.repeat(q, 1, 2), jnp.repeat(k, 2, 2), jnp.repeat(v, 2, 2),
+        rows, rows, scale=32 ** -0.5, causal=True, window=None,
+        kv_valid=None)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_unroll_scans_matches_scan():
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=64,
+                      n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+                      vocab_size=64, dtype="float32")
+    cfg_u = dataclasses.replace(cfg, unroll_scans=True)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    S = 4096
+    q = jax.random.normal(ks[0], (1, S, 2, 32)) * 0.3
+    k = jax.random.normal(ks[1], (1, S, 2, 32)) * 0.3
+    v = jax.random.normal(ks[2], (1, S, 2, 32))
+    a = A._sdpa(q, k, v, cfg, causal=True)
+    b = A._sdpa(q, k, v, cfg_u, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

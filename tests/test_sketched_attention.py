@@ -1,0 +1,83 @@
+"""The paper's technique applied to attention: quality + scaling laws."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sketched_attention import (build_landmark_state,
+                                           landmark_decode,
+                                           sketched_attention)
+
+
+def _qkv(key, S=256, D=32, scale=0.4):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (S, D)) * scale
+    k = jax.random.normal(ks[1], (S, D)) * scale
+    v = jax.random.normal(ks[2], (S, D))
+    return q, k, v
+
+
+def _exact(q, k, v):
+    logits = (q @ k.T) / np.sqrt(q.shape[-1])
+    w = jax.nn.softmax(logits, axis=-1)
+    return w @ v
+
+
+def _err(a, b):
+    return float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+
+
+def test_sketched_attention_error_decreases_with_c():
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    exact = _exact(q, k, v)
+    errs = []
+    for c in (8, 32, 128):
+        outs = [sketched_attention(q, k, v, jax.random.PRNGKey(10 + i),
+                                   c=c, theta=4)
+                for i in range(3)]
+        errs.append(np.mean([_err(o, exact) for o in outs]))
+    assert errs[0] > errs[-1], errs
+    assert errs[-1] < 0.15, errs
+
+
+def test_fast_mode_beats_nystrom_mode():
+    """The paper's core claim transplanted to the softmax Gram."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), S=384)
+    exact = _exact(q, k, v)
+    e_fast = np.mean([_err(sketched_attention(
+        q, k, v, jax.random.PRNGKey(20 + i), c=24, theta=8, mode="fast"),
+        exact) for i in range(5)])
+    e_nys = np.mean([_err(sketched_attention(
+        q, k, v, jax.random.PRNGKey(20 + i), c=24, theta=8, mode="nystrom"),
+        exact) for i in range(5)])
+    assert e_fast <= e_nys + 1e-3, (e_fast, e_nys)
+
+
+def test_landmark_state_decode_read():
+    """Prefill-built landmark state answers one-token reads close to exact
+    attention over the full context."""
+    key = jax.random.PRNGKey(2)
+    S, D = 512, 32
+    _, k, v = _qkv(key, S=S, D=D)
+    state = build_landmark_state(k, v, jax.random.fold_in(key, 1), c=64,
+                                 theta=4)
+    q1 = jax.random.normal(jax.random.fold_in(key, 2), (4, D)) * 0.4
+    got = jax.vmap(lambda qq: landmark_decode(state, qq))(q1)
+    want = _exact(q1, k, v)
+    assert _err(got, want) < 0.35, _err(got, want)
+
+
+def test_landmark_read_kernel_path_matches_core():
+    from repro.kernels.landmark_attention import ops as lm_ops
+    key = jax.random.PRNGKey(3)
+    S, D = 256, 32
+    _, k, v = _qkv(key, S=S, D=D)
+    state = build_landmark_state(k, v, jax.random.fold_in(key, 1), c=32,
+                                 theta=4)
+    q1 = jax.random.normal(jax.random.fold_in(key, 2), (8, D)) * 0.4
+    a = jax.vmap(lambda qq: landmark_decode(state, qq))(q1)
+    b = lm_ops.landmark_read(q1, state.k_land, state.UV, state.U1,
+                             state.scale)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=2e-2,
+                               atol=2e-2)

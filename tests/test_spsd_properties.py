@@ -1,0 +1,364 @@
+"""Property tests for the paper's core claims (Thms 3/6/7, Corollary 5,
+Appendix A), plus the sketch-operator algebra they depend on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cur, eig, kernelop, spsd
+from repro.core import sketch as sk
+from repro.core.leverage import pinv, row_leverage_scores
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _lowrank_spsd(key, n, r):
+    X = jax.random.normal(key, (n, r))
+    return X @ X.T
+
+
+def _clustered_rbf(seed, n=300, d=6, k=6, sigma=2.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 3
+    X = np.concatenate([c + rng.normal(size=(n // k, d)) * 0.3
+                        for c in centers])
+    return kernelop.RBFKernel(jnp.asarray(X, jnp.float32), sigma=sigma)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 6: exact recovery when rank(K) == rank(C)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 1000))
+def test_exact_recovery(r, seed):
+    key = jax.random.PRNGKey(seed)
+    n = 40
+    K = _lowrank_spsd(key, n, r)
+    c = r + 4                        # rank(C) = rank(K) w.p. 1
+    ap = spsd.fast_model(K, jax.random.fold_in(key, 1), c=c, s=2 * c,
+                         s_sketch="uniform")
+    err = float(spsd.relative_error(K, ap))
+    assert err < 1e-3, err
+
+
+def test_exact_recovery_fails_when_rank_deficient():
+    key = jax.random.PRNGKey(0)
+    K = _lowrank_spsd(key, 40, 10)
+    ap = spsd.fast_model(K, jax.random.fold_in(key, 1), c=3, s=8,
+                         s_sketch="uniform")
+    assert float(spsd.relative_error(K, ap)) > 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Unified view: Nystrom and prototype are special cases of the fast model
+# ---------------------------------------------------------------------------
+
+def test_nystrom_is_fast_with_S_eq_P():
+    K = np.asarray(_clustered_rbf(0).full())
+    key = jax.random.PRNGKey(1)
+    idx = jax.random.choice(key, K.shape[0], shape=(20,), replace=False)
+    C = jnp.take(K, idx, axis=1)
+    W = jnp.take(jnp.take(K, idx, axis=0), idx, axis=1)
+    U_nys = spsd.nystrom_U(W)
+    # fast U with S = P (selection of the same idx, unscaled)
+    StC = jnp.take(C, idx, axis=0)
+    U_fast = spsd.fast_U(StC, W)
+    np.testing.assert_allclose(np.asarray(U_nys), np.asarray(U_fast),
+                               rtol=2e-2, atol=2e-4)
+
+
+def test_prototype_is_fast_with_S_eq_I():
+    K = jnp.asarray(np.asarray(_clustered_rbf(1).full()))
+    key = jax.random.PRNGKey(2)
+    idx = jax.random.choice(key, K.shape[0], shape=(15,), replace=False)
+    C = jnp.take(K, idx, axis=1)
+    U_star = spsd.prototype_U(K, C)
+    U_fast = spsd.fast_U(C, K)       # S = I_n
+    np.testing.assert_allclose(np.asarray(U_star), np.asarray(U_fast),
+                               rtol=2e-2, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3 (statistical): fast ~ prototype; accuracy ordering on average
+# ---------------------------------------------------------------------------
+
+def test_error_ordering_nystrom_fast_prototype():
+    Kop = _clustered_rbf(2)
+    kc = jax.random.PRNGKey(3)
+    base = spsd.sample_C(Kop, kc, 15)
+    proto = spsd.prototype_model(Kop, base.C, base.P_indices)
+    e_proto = float(spsd.relative_error(Kop, proto))
+
+    W = Kop.block(base.P_indices, base.P_indices)
+    nys = spsd.SPSDApprox(C=base.C, U=spsd.nystrom_U(W),
+                          P_indices=base.P_indices)
+    e_nys = float(spsd.relative_error(Kop, nys))
+
+    e_fast = np.mean([
+        float(spsd.relative_error(Kop, spsd.fast_model_from_C(
+            Kop, base.C, jax.random.PRNGKey(10 + i), 8 * 15,
+            P_indices=base.P_indices, s_sketch="uniform")))
+        for i in range(5)])
+
+    # prototype is optimal for this C; fast with s=8c sits between
+    assert e_proto <= e_fast + 1e-6
+    assert e_fast <= e_nys + 1e-3, (e_fast, e_nys)
+
+
+def test_fast_error_decreases_with_s():
+    Kop = _clustered_rbf(3)
+    base = spsd.sample_C(Kop, jax.random.PRNGKey(0), 12)
+    errs = []
+    for s_mult in (2, 8, 20):
+        e = np.mean([float(spsd.relative_error(Kop, spsd.fast_model_from_C(
+            Kop, base.C, jax.random.PRNGKey(50 + 7 * i + s_mult), s_mult * 12,
+            P_indices=base.P_indices, s_sketch="uniform")))
+            for i in range(5)])
+        errs.append(e)
+    assert errs[2] <= errs[0] + 1e-6, errs
+
+
+@pytest.mark.parametrize("kind", ["uniform", "leverage", "gaussian",
+                                  "srht", "countsketch"])
+def test_fast_model_all_sketches(kind):
+    """Every Table-4 sketch family produces a sane fast model."""
+    Kop = _clustered_rbf(4)
+    base = spsd.sample_C(Kop, jax.random.PRNGKey(0), 15)
+    ap = spsd.fast_model_from_C(Kop, base.C, jax.random.PRNGKey(1), 90,
+                                P_indices=base.P_indices, s_sketch=kind)
+    e = float(spsd.relative_error(Kop, ap))
+    proto = spsd.prototype_model(Kop, base.C, base.P_indices)
+    e_proto = float(spsd.relative_error(Kop, proto))
+    assert np.isfinite(e)
+    assert e <= 3 * e_proto + 0.05, (kind, e, e_proto)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 7 lower bound (adversarial block-diagonal case, Lemma 23)
+# ---------------------------------------------------------------------------
+
+def test_lower_bound_adversarial():
+    n, k, c, s = 64, 4, 8, 16
+    p = n // k
+    alpha = 0.999
+    B = (1 - alpha) * np.eye(p) + alpha * np.ones((p, p))
+    K = jnp.asarray(np.kron(np.eye(k), B), jnp.float32)
+
+    # uniform selection respecting P subset S, block-balanced
+    rng = np.random.default_rng(0)
+    ratios = []
+    for trial in range(5):
+        pidx = np.concatenate([rng.choice(p, c // k, replace=False) + i * p
+                               for i in range(k)])
+        extra = np.concatenate([rng.choice(p, (s - c) // k, replace=False)
+                                + i * p for i in range(k)])
+        sidx = np.unique(np.concatenate([pidx, extra]))
+        C = jnp.take(K, pidx, axis=1)
+        StC = jnp.take(C, sidx, axis=0)
+        StKS = jnp.take(jnp.take(K, sidx, axis=0), sidx, axis=1)
+        U = spsd.fast_U(StC, StKS)
+        approx = spsd.SPSDApprox(C=C, U=U)
+        Kk_err = float(jnp.sum(jnp.sort(jnp.linalg.eigvalsh(K) ** 2)[:n - k]))
+        num = float(jnp.sum((K - approx.dense()) ** 2))
+        ratios.append(num / Kk_err)
+    s_eff = len(sidx)
+    bound = ((n - c) / (n - k) * (1 + 2 * k / c)
+             + (n - s_eff) / (n - k) * k * (n - s_eff) / s_eff ** 2)
+    # Thm 7: no selection does better than the bound (up to alpha->1 limit)
+    assert np.mean(ratios) >= 0.8 * bound, (np.mean(ratios), bound)
+
+
+# ---------------------------------------------------------------------------
+# Corollary 5 / S4.5 implementation details
+# ---------------------------------------------------------------------------
+
+def test_subset_union_contains_P():
+    key = jax.random.PRNGKey(0)
+    S = sk.uniform_column_sketch(key, 100, 20, scale=False)
+    P_idx = jnp.arange(7)
+    S2 = sk.subset_union_sketch(S, P_idx, 100)
+    got = set(np.asarray(S2.indices).tolist())
+    assert set(range(7)) <= got
+
+
+# ---------------------------------------------------------------------------
+# Appendix A solvers
+# ---------------------------------------------------------------------------
+
+def test_approx_eigh_matches_dense():
+    key = jax.random.PRNGKey(0)
+    C = jax.random.normal(key, (50, 8))
+    U = jnp.eye(8) * jnp.arange(1, 9)
+    lam, V = jnp.linalg.eigh(C @ U @ C.T)
+    res = eig.approx_eigh(C, U, k=5)
+    np.testing.assert_allclose(np.asarray(res.eigenvalues),
+                               np.asarray(lam[::-1][:5]), rtol=1e-4,
+                               atol=1e-4)
+    # eigenvectors span check via projector difference
+    Vt = np.asarray(V[:, ::-1][:, :5])
+    Va = np.asarray(res.eigenvectors)
+    np.testing.assert_allclose(Va.T @ Va, np.eye(5), atol=1e-4)
+    np.testing.assert_allclose(Vt @ Vt.T, Va @ Va.T, atol=1e-3)
+
+
+def test_woodbury_solve():
+    key = jax.random.PRNGKey(1)
+    C = jax.random.normal(key, (40, 6))
+    U = jnp.eye(6)
+    y = jax.random.normal(jax.random.fold_in(key, 1), (40,))
+    alpha = 0.5
+    w = eig.woodbury_solve(C, U, alpha, y)
+    direct = jnp.linalg.solve(C @ U @ C.T + alpha * jnp.eye(40), y)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(direct), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_woodbury_solve_singular_U():
+    key = jax.random.PRNGKey(2)
+    C = jax.random.normal(key, (30, 5))
+    U = jnp.diag(jnp.asarray([1.0, 1.0, 0.0, 0.0, 2.0]))   # singular
+    y = jax.random.normal(jax.random.fold_in(key, 3), (30,))
+    w = eig.woodbury_solve(C, U, 0.3, y)
+    direct = jnp.linalg.solve(C @ U @ C.T + 0.3 * jnp.eye(30), y)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(direct), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_misalignment_bounds():
+    key = jax.random.PRNGKey(3)
+    Q, _ = jnp.linalg.qr(jax.random.normal(key, (30, 10)))
+    U_true, V = Q[:, :3], Q[:, 3:6]
+    assert float(eig.misalignment(U_true, U_true)) < 1e-6
+    m = float(eig.misalignment(U_true, V))
+    assert 0.0 <= m <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# sketch operator algebra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "srht", "countsketch"])
+def test_projection_sym_consistency(kind):
+    key = jax.random.PRNGKey(0)
+    K = _lowrank_spsd(key, 33, 5)
+    S = sk.make_sketch(kind, jax.random.fold_in(key, 1), 33, 16)
+    sym = S.sym(K)
+    via_left = S.left(S.left(K).T).T
+    np.testing.assert_allclose(np.asarray(sym), np.asarray(via_left),
+                               rtol=1e-4, atol=1e-4)
+    assert sym.shape[0] == sym.shape[1]
+
+
+def test_column_sketch_matches_dense_matrix():
+    key = jax.random.PRNGKey(4)
+    A = jax.random.normal(key, (20, 7))
+    S = sk.uniform_column_sketch(jax.random.fold_in(key, 1), 20, 6,
+                                 scale=True)
+    dense_S = np.zeros((20, 6), np.float32)
+    dense_S[np.asarray(S.indices), np.arange(6)] = np.asarray(S.scales)
+    np.testing.assert_allclose(np.asarray(S.left(A)),
+                               dense_S.T @ np.asarray(A), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_countsketch_linearity(seed):
+    """S^T(a+b) == S^T a + S^T b — what makes sketch-then-allreduce sound."""
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (50, 3))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (50, 3))
+    S = sk.count_sketch(jax.random.fold_in(key, 2), 50, 10)
+    np.testing.assert_allclose(np.asarray(S.left(a + b)),
+                               np.asarray(S.left(a) + S.left(b)), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_srht_orthogonal_part():
+    """The DH/sqrt(n) part of SRHT is orthogonal: full S (s=n_pad) preserves
+    norms exactly."""
+    key = jax.random.PRNGKey(5)
+    n = 32
+    x = jax.random.normal(key, (n, 4))
+    S = sk.srht_sketch(jax.random.fold_in(key, 1), n, n)   # s = n = n_pad
+    y = S.left(x)
+    # s = n_pad: sampling w/o replacement hits every row once; norms match
+    np.testing.assert_allclose(float(jnp.linalg.norm(y)),
+                               float(jnp.linalg.norm(x)), rtol=1e-4)
+
+
+def test_leverage_scores_sum_to_rank():
+    key = jax.random.PRNGKey(6)
+    A = jax.random.normal(key, (40, 5))
+    lev = row_leverage_scores(A)
+    assert abs(float(jnp.sum(lev)) - 5.0) < 1e-3
+    assert float(jnp.max(lev)) <= 1.0 + 1e-5
+
+
+def test_pinv_matches_numpy():
+    key = jax.random.PRNGKey(7)
+    A = jax.random.normal(key, (12, 5))
+    np.testing.assert_allclose(np.asarray(pinv(A)),
+                               np.linalg.pinv(np.asarray(A)), rtol=1e-3,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# CUR (S5): optimality, fast ~ optimal, drineas08 worst (Fig. 2 ordering)
+# ---------------------------------------------------------------------------
+
+def _lowrank_matrix(key, m, n, r, noise=0.01):
+    a = jax.random.normal(key, (m, r))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (r, n))
+    e = jax.random.normal(jax.random.fold_in(key, 2), (m, n)) * noise
+    return a @ b + e
+
+
+def test_cur_ordering():
+    key = jax.random.PRNGKey(0)
+    A = _lowrank_matrix(key, 80, 60, 5)
+    kcur = jax.random.fold_in(key, 3)
+    opt = cur.optimal_cur(A, kcur, c=12, r=12)
+    e_opt = float(cur.relative_error(A, opt))
+
+    fast_errs, dri_errs = [], []
+    for i in range(5):
+        f = cur.fast_cur(A, jax.random.fold_in(key, 10 + i), c=12, r=12,
+                         sc=48, sr=48, sketch_kind="uniform")
+        fast_errs.append(float(cur.relative_error(A, f)))
+        C, R, cidx, ridx = cur.select_cur_sketches(
+            A, jax.random.fold_in(key, 10 + i), 12, 12)
+        U = cur.drineas08_U(A, cidx, ridx)
+        dri_errs.append(float(cur.relative_error(
+            A, cur.CURApprox(C=C, U=U, R=R))))
+    e_fast, e_dri = np.mean(fast_errs), np.mean(dri_errs)
+    assert e_opt <= e_fast + 1e-6
+    assert e_fast <= e_dri + 1e-6, (e_fast, e_dri)
+    # Thm 9 regime: fast is close to optimal
+    assert e_fast <= 5 * e_opt + 0.02, (e_fast, e_opt)
+
+
+def test_fast_cur_improves_with_sketch_size():
+    key = jax.random.PRNGKey(1)
+    A = _lowrank_matrix(key, 100, 70, 6)
+    errs = []
+    for s in (16, 30, 64):
+        e = np.mean([float(cur.relative_error(A, cur.fast_cur(
+            A, jax.random.PRNGKey(100 + 13 * i + s), c=12, r=12, sc=s, sr=s,
+            sketch_kind="uniform"))) for i in range(5)])
+        errs.append(e)
+    assert errs[-1] <= errs[0] + 1e-6, errs
+
+
+def test_adaptive_rows_reduce_residual():
+    key = jax.random.PRNGKey(2)
+    A = _lowrank_matrix(key, 60, 40, 8, noise=0.0)
+    base = jnp.arange(4)
+    idx = cur.adaptive_row_indices(A, base, jax.random.fold_in(key, 1), 8)
+    R1 = jnp.take(A, base, axis=0)
+    R2 = jnp.take(A, idx, axis=0)
+    r1 = float(jnp.linalg.norm(A - (A @ pinv(R1)) @ R1))
+    r2 = float(jnp.linalg.norm(A - (A @ pinv(R2)) @ R2))
+    assert r2 <= r1 + 1e-5
