@@ -6,29 +6,41 @@ with --adaptive, Fig. 4), then the U matrix from
   - the fast model (S = uniform / leverage sampling), s in {2c..40c},
   - the prototype model (s = n).
 y-axis metric: ||K - C U C^T||_F^2 / ||K||_F^2.
+
+``--streaming`` evaluates everything through the blockwise operator protocol
+(Hutchinson error estimates, projection sketches via blocked K @ S, no n×n
+allocations); ``--scaling-ns 5000 20000 50000`` runs the linear-in-n sweep
+(Table 3's "#Entries" story at sizes the dense path cannot reach).
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
 import numpy as np
 
-from benchmarks.common import (DATASETS, calibrate_sigma, make_dataset,
-                               print_table)
+from benchmarks.common import calibrate_sigma, make_dataset, print_table
 from repro.core import spsd
 from repro.core.adaptive import uniform_adaptive2_indices
 from repro.core.kernelop import RBFKernel
 
 
 def run(dataset: str, eta: float, adaptive: bool, seed: int = 0,
-        s_mults=(2, 4, 8, 20, 40), n=None):
+        s_mults=(2, 4, 8, 20, 40), n=None, streaming: bool = False,
+        probes: int = 64):
     X, _ = make_dataset(dataset, seed=seed, n=n)
     n_ = X.shape[0]
     k = max(n_ // 100, 3)
     sigma = calibrate_sigma(X, eta, k)
     Kop = RBFKernel(X, sigma=sigma)
     c = max(n_ // 100, 8)
+    err_kw = (dict(method="hutchinson", probes=probes) if streaming
+              else dict(method="dense"))
+
+    def rel_err(ap, i=0):
+        return float(spsd.relative_error(
+            Kop, ap, key=jax.random.PRNGKey(777 + i), **err_kw))
 
     key = jax.random.PRNGKey(seed)
     if adaptive:
@@ -42,24 +54,63 @@ def run(dataset: str, eta: float, adaptive: bool, seed: int = 0,
     W = Kop.block(base.P_indices, base.P_indices)
     nys = spsd.SPSDApprox(C=base.C, U=spsd.nystrom_U(W),
                           P_indices=base.P_indices)
-    rows.append(("nystrom", "-", float(spsd.relative_error(Kop, nys))))
+    rows.append(("nystrom", "-", rel_err(nys)))
 
-    for s_kind in ("uniform", "leverage"):
+    s_kinds = (("uniform", "leverage", "gaussian") if streaming
+               else ("uniform", "leverage"))
+    for s_kind in s_kinds:
         for m in s_mults:
-            errs = [float(spsd.relative_error(Kop, spsd.fast_model_from_C(
-                Kop, base.C, jax.random.PRNGKey(100 + i), m * c,
-                P_indices=base.P_indices, s_sketch=s_kind)))
+            s = min(m * c, n_)      # s=40c can exceed tiny --n sizes
+            errs = [rel_err(spsd.fast_model_from_C(
+                Kop, base.C, jax.random.PRNGKey(100 + i), s,
+                P_indices=base.P_indices, s_sketch=s_kind,
+                streaming=streaming or None), i)
                 for i in range(3)]
             rows.append((f"fast[{s_kind}]", f"s={m}c "
-                         f"(s/n={m * c / n_:.2f})", float(np.mean(errs))))
+                         f"(s/n={s / n_:.2f})", float(np.mean(errs))))
 
     proto = spsd.prototype_model(Kop, base.C, base.P_indices)
-    rows.append(("prototype", "s=n", float(spsd.relative_error(Kop, proto))))
+    rows.append(("prototype", "s=n", rel_err(proto)))
 
     title = (f"Fig {'4' if adaptive else '3'}: {dataset} n={n_} c={c} "
-             f"sigma={sigma:.3f} eta~{eta}")
+             f"sigma={sigma:.3f} eta~{eta}"
+             f"{' [streaming/hutchinson]' if streaming else ''}")
     print_table(title, ["model", "sketch", "rel err ||K-CUC'||F^2/||K||F^2"],
                 [(a, b, f"{e:.5f}") for a, b, e in rows])
+    return rows
+
+
+def run_scaling(ns, seed: int = 0, s_kind: str = "gaussian",
+                probes: int = 16):
+    """n-scaling sweep: the fast model + streaming metrics at growing n.
+
+    Everything here goes through the blockwise protocol — no n×n array exists
+    at any point, so n is bounded by O(n·c) memory, not O(n²).
+    """
+    rows = []
+    for n in ns:
+        X, _ = make_dataset("letters", seed=seed, n=n)
+        # sigma=1 leaves K near-identity on the standardized 16-d mixture
+        # (no low-rank structure to capture); 3.0 matches the eta~0.9 regime
+        Kop = RBFKernel(X, sigma=3.0)
+        c = max(n // 200, 32)
+        s = 4 * c
+        t0 = time.perf_counter()
+        ap = spsd.fast_model(Kop, jax.random.PRNGKey(seed), c=c, s=s,
+                             s_sketch=s_kind, streaming=True)
+        jax.block_until_ready(ap.U)
+        t_model = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        err = float(spsd.relative_error(Kop, ap, method="hutchinson",
+                                        probes=probes,
+                                        key=jax.random.PRNGKey(1)))
+        t_err = time.perf_counter() - t0
+        rows.append((n, c, s, f"{t_model:8.2f}", f"{t_err:8.2f}",
+                     f"{err:.5f}", f"{n * c + (s - c) ** 2:>12,}"))
+    print_table(f"n-scaling sweep (fast[{s_kind}], streaming, hutchinson "
+                f"q={probes})",
+                ["n", "c", "s", "model s", "err s", "rel err", "#K entries"],
+                rows)
     return rows
 
 
@@ -70,9 +121,19 @@ def main(argv=None):
     p.add_argument("--eta", type=float, default=0.9)
     p.add_argument("--adaptive", action="store_true")
     p.add_argument("--n", type=int, default=None)
+    p.add_argument("--streaming", action="store_true",
+                   help="blockwise operator paths + Hutchinson error metrics")
+    p.add_argument("--probes", type=int, default=64)
+    p.add_argument("--scaling-ns", nargs="*", type=int, default=None,
+                   help="run the streaming n-scaling sweep at these sizes "
+                        "instead of the Fig. 3/4 tables (e.g. 5000 20000 50000)")
     args = p.parse_args(argv)
+    if args.scaling_ns:
+        run_scaling(args.scaling_ns)
+        return
     for ds in args.datasets:
-        run(ds, args.eta, args.adaptive, n=args.n)
+        run(ds, args.eta, args.adaptive, n=args.n, streaming=args.streaming,
+            probes=args.probes)
 
 
 if __name__ == "__main__":

@@ -13,11 +13,34 @@ SUITES = ["spsd_error", "spsd_error_adaptive", "kpca", "spectral", "cur",
           "time", "landmark", "ablations"]
 
 
+def smoke() -> int:
+    """Tiny-shape pass over every perf entry point, CI-sized (~1 min CPU).
+
+    Exercises the argument plumbing and the streaming code paths so the
+    benchmark suite cannot bit-rot; numbers produced here are meaningless.
+    """
+    t0 = time.time()
+    from benchmarks import bench_cur, bench_spsd_error, bench_time
+    bench_spsd_error.main(["--datasets", "letters", "--n", "400"])
+    bench_spsd_error.main(["--datasets", "letters", "--n", "400",
+                           "--streaming", "--probes", "32"])
+    bench_spsd_error.main(["--scaling-ns", "3000"])
+    bench_time.main(["--ns", "400", "800"])
+    bench_time.main(["--ns", "400", "800", "--streaming"])
+    bench_cur.main([])
+    print(f"\nsmoke benchmarks completed in {time.time() - t0:.1f}s")
+    return 0
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--only", nargs="*", default=None,
                    help=f"subset of {SUITES}")
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny-shape CI pass over the perf entry points")
     args = p.parse_args(argv)
+    if args.smoke:
+        return smoke()
     picked = args.only or SUITES
 
     t0 = time.time()

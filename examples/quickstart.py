@@ -1,13 +1,20 @@
-"""Quickstart: the fast SPSD model in 60 lines.
+"""Quickstart: the fast SPSD model in a few dozen lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py            # small-n tour
+    PYTHONPATH=src python examples/quickstart.py --large-n 50000
 
-Builds an RBF kernel operator over 2,000 points (never materializing K),
-sketches C = K P with c = 40 uniform columns, computes the paper's
+Builds an RBF kernel operator (never materializing K), sketches C = K P with
+c uniform columns, computes the paper's
 U^fast = (S^T C)^+ (S^T K S) (C^T S)^+ with s = 8c leverage-sampled rows,
 and uses the resulting (C, U) for the two downstream Appendix-A solvers:
 rank-k eigendecomposition and a regularized kernel solve, both O(n c^2).
+
+``--large-n`` runs the streaming pipeline at a size where no n×n array can
+exist: the gaussian projection sketch goes through blocked K @ S and the
+error metric through Hutchinson probes — everything O(n) memory.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,38 +22,88 @@ import numpy as np
 from repro.core import eig, spsd
 from repro.core.kernelop import RBFKernel
 
-# --- data + implicit kernel -------------------------------------------------
-rng = np.random.default_rng(0)
-centers = rng.normal(size=(12, 10)) * 2.5
-X = jnp.asarray(np.concatenate(
-    [c + rng.normal(size=(170, 10)) * 0.5 for c in centers]), jnp.float32)
-n = X.shape[0]
-K = RBFKernel(X, sigma=2.0)                     # entries computed on demand
-print(f"n = {n} points; K is {n}x{n} but never materialized")
 
-# --- Algorithm 1: C = KP, U^fast --------------------------------------------
-key = jax.random.PRNGKey(0)
-c, s = 40, 320
-approx = spsd.fast_model(K, key, c=c, s=s, s_sketch="leverage")
-err = float(spsd.relative_error(K, approx))
-print(f"fast model   (c={c}, s={s}): ||K-CUC'||F^2/||K||F^2 = {err:.4f}")
+def small_tour():
+    # --- data + implicit kernel ----------------------------------------------
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(12, 10)) * 2.5
+    X = jnp.asarray(np.concatenate(
+        [c + rng.normal(size=(170, 10)) * 0.5 for c in centers]), jnp.float32)
+    n = X.shape[0]
+    K = RBFKernel(X, sigma=2.0)                 # entries computed on demand
+    print(f"n = {n} points; K is {n}x{n} but never materialized")
 
-nys = spsd.nystrom_model(K, key, c=c)
-print(f"nystrom      (c={c}):        "
-      f"{float(spsd.relative_error(K, nys)):.4f}")
-proto = spsd.prototype_model(K, approx.C, approx.P_indices)
-print(f"prototype    (c={c}, s=n):   "
-      f"{float(spsd.relative_error(K, proto)):.4f}   <- best possible U")
+    # --- Algorithm 1: C = KP, U^fast -----------------------------------------
+    key = jax.random.PRNGKey(0)
+    c, s = 40, 320
+    approx = spsd.fast_model(K, key, c=c, s=s, s_sketch="leverage")
+    err = float(spsd.relative_error(K, approx))
+    print(f"fast model   (c={c}, s={s}): ||K-CUC'||F^2/||K||F^2 = {err:.4f}")
 
-# --- Appendix A: O(nc^2) downstream solvers ---------------------------------
-k = 6
-res = eig.approx_eigh(approx.C, approx.U, k)
-lam_true = jnp.linalg.eigvalsh(K.full())[::-1][:k]
-print(f"\ntop-{k} eigenvalues (approx) {np.round(np.asarray(res.eigenvalues), 2)}")
-print(f"top-{k} eigenvalues (exact)  {np.round(np.asarray(lam_true), 2)}")
+    nys = spsd.nystrom_model(K, key, c=c)
+    print(f"nystrom      (c={c}):        "
+          f"{float(spsd.relative_error(K, nys)):.4f}")
+    proto = spsd.prototype_model(K, approx.C, approx.P_indices)
+    print(f"prototype    (c={c}, s=n):   "
+          f"{float(spsd.relative_error(K, proto)):.4f}   <- best possible U")
 
-y = jax.random.normal(jax.random.PRNGKey(1), (n,))
-w = eig.woodbury_solve(approx.C, approx.U, alpha=1.0, y=y)
-resid = (approx.matmat(w[:, None])[:, 0] + w) - y
-print(f"\nKRR solve (K̃+I)w=y: residual {float(jnp.linalg.norm(resid)):.2e} "
-      f"(O(nc^2) via Woodbury)")
+    # --- Appendix A: O(nc^2) downstream solvers ------------------------------
+    k = 6
+    res = eig.approx_eigh(approx.C, approx.U, k)
+    lam_true = jnp.linalg.eigvalsh(K.full())[::-1][:k]
+    print(f"\ntop-{k} eigenvalues (approx) "
+          f"{np.round(np.asarray(res.eigenvalues), 2)}")
+    print(f"top-{k} eigenvalues (exact)  {np.round(np.asarray(lam_true), 2)}")
+
+    y = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    w = eig.woodbury_solve(approx.C, approx.U, alpha=1.0, y=y)
+    resid = (approx.matmat(w[:, None])[:, 0] + w) - y
+    print(f"\nKRR solve (K̃+I)w=y: residual "
+          f"{float(jnp.linalg.norm(resid)):.2e} (O(nc^2) via Woodbury)")
+
+
+def large_n_demo(n: int):
+    """Streaming pipeline at a scale the dense path cannot touch.
+
+    An n=50,000 RBF kernel is 10 GB in f32; this demo's peak footprint is a
+    single ~128 MB row panel plus the (n, c) sketch.
+    """
+    rng = np.random.default_rng(0)
+    d = 16
+    centers = rng.normal(size=(32, d)) * 2.0
+    labels = rng.integers(0, 32, size=n)
+    X = jnp.asarray(centers[labels] + rng.normal(size=(n, d)) * 0.5,
+                    jnp.float32)
+    K = RBFKernel(X, sigma=3.0)
+    c = max(n // 250, 64)
+    s = 4 * c
+    print(f"\n=== streaming demo: n={n}, c={c}, s={s} "
+          f"(K would be {4 * n * n / 1e9:.1f} GB dense — never built) ===")
+
+    approx = spsd.fast_model(K, jax.random.PRNGKey(0), c=c, s=s,
+                             s_sketch="gaussian", streaming=True)
+    print("fast model [gaussian projection via blocked K @ S]: done")
+
+    err = float(spsd.relative_error(K, approx, method="hutchinson",
+                                    probes=16, key=jax.random.PRNGKey(2)))
+    print(f"relative error (Hutchinson, 16 probes): {err:.4f}")
+
+    lam = spsd.streaming_topk_eigvals(K, 5, jax.random.PRNGKey(3))
+    print(f"top-5 eigenvalues (randomized subspace iteration): "
+          f"{np.round(np.asarray(lam), 1)}")
+
+    y = jax.random.normal(jax.random.PRNGKey(4), (n,))
+    w = eig.woodbury_solve(approx.C, approx.U, alpha=1.0, y=y)
+    resid = (approx.matmat(w[:, None])[:, 0] + w) - y
+    print(f"KRR solve residual: {float(jnp.linalg.norm(resid)):.2e}")
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--large-n", type=int, default=None,
+                   help="also run the streaming large-n demo at this size "
+                        "(e.g. 50000)")
+    args = p.parse_args()
+    small_tour()
+    if args.large_n:
+        large_n_demo(args.large_n)

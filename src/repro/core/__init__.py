@@ -2,19 +2,24 @@
 
 Public API re-exports.
 """
-from repro.core.kernelop import DenseSPSD, LinearKernel, RBFKernel, as_operator
+from repro.core.kernelop import (DenseSPSD, LinearKernel, RBFKernel,
+                                 SPSDOperator, as_operator)
 from repro.core.leverage import (column_leverage_scores, orthonormal_basis,
                                  pinv, row_coherence, row_leverage_scores)
 from repro.core.sketch import (SKETCH_KINDS, ColumnSketch, CountSketch,
                                GaussianSketch, SRHTSketch, count_sketch, fwht,
-                               leverage_column_sketch, make_sketch, srht_sketch,
-                               subset_union_sketch, uniform_column_sketch)
+                               leverage_column_sketch, make_sketch,
+                               right_streaming, srht_sketch,
+                               subset_union_sketch, sym_streaming,
+                               uniform_column_sketch)
 from repro.core.spsd import (SPSDApprox, error_vs_best_rank_k, fast_U,
-                             fast_model, fast_model_from_C, nystrom_U,
-                             nystrom_model, prototype_U, prototype_model,
-                             relative_error, sample_C)
-from repro.core.cur import (CURApprox, adaptive_row_indices, drineas08_U,
-                            fast_U_cur, fast_cur, optimal_U, optimal_cur)
+                             fast_model, fast_model_batched, fast_model_from_C,
+                             nystrom_U, nystrom_model, prototype_U,
+                             prototype_model, relative_error, sample_C,
+                             streaming_topk_eigvals)
+from repro.core.cur import (CURApprox, adaptive_row_indices,
+                            blocked_right_sketch, drineas08_U, fast_U_cur,
+                            fast_cur, optimal_U, optimal_cur)
 from repro.core.eig import (EigResult, approx_eigh, kpca_features,
                             kpca_transform, misalignment, spectral_embedding,
                             woodbury_solve)

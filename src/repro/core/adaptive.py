@@ -15,13 +15,24 @@ from repro.core.kernelop import as_operator
 from repro.core.leverage import pinv
 
 
-def _residual_column_norms(Kop, idx: jnp.ndarray) -> jnp.ndarray:
-    """||(I − C C†) K||² column norms; K materialized blockwise via operator."""
+def _residual_column_norms(Kop, idx: jnp.ndarray,
+                           block_size=None) -> jnp.ndarray:
+    """||(I − C C†) K||² column norms, accumulated over row panels.
+
+    C† K = (K (C†)^T)^T by symmetry of K, so one streaming ``matmat`` plus one
+    ``map_row_panels`` pass computes the norms without materializing K.
+    """
     C = Kop.columns(idx).astype(jnp.float32)
-    Cp = pinv(C)                        # (c, n)
-    K = Kop.full().astype(jnp.float32)
-    resid = K - C @ (Cp @ K)
-    return jnp.sum(resid * resid, axis=0)
+    Cp = pinv(C)                                       # (c, n)
+    CpK = Kop.matmat(Cp.T, block_size=block_size).T    # (c, n) == C† K
+
+    def fn(panel, ridx, valid):
+        resid = panel.astype(jnp.float32) - jnp.take(C, ridx, axis=0) @ CpK
+        v = valid.astype(jnp.float32)[:, None]
+        return jnp.sum(resid * resid * v, axis=0)      # per-column partials
+
+    parts = Kop.map_row_panels(fn, block_size)         # (nblocks, n)
+    return jnp.sum(parts, axis=0)
 
 
 def uniform_adaptive2_indices(K, key: jax.Array, c: int) -> jnp.ndarray:

@@ -54,6 +54,28 @@ def fast_U_cur(ScC: jnp.ndarray, ScASr: jnp.ndarray, RSr: jnp.ndarray) -> jnp.nd
     return pinv(ScC) @ ScASr.astype(jnp.float32) @ pinv(RSr)
 
 
+def blocked_right_sketch(A: jnp.ndarray, S, block_size: int = 1024) -> jnp.ndarray:
+    """A S (m × s) streamed over row blocks of A.
+
+    The dense route ``S.left(A.T).T`` stages an n×m transposed copy (and, for
+    SRHT, a zero-padded one on top); streaming row blocks keeps the peak
+    footprint at O(b·n + m·s) — the CUR analogue of the SPSD panel protocol.
+    """
+    if isinstance(S, sk.GaussianSketch):
+        return S.right(A)       # one GEMM; blocking would redraw S per block
+    m = A.shape[0]
+    bs = max(1, min(block_size, m))
+    nblocks = -(-m // bs)
+    starts = jnp.arange(nblocks) * bs
+
+    def body(start):
+        idx = jnp.clip(start + jnp.arange(bs), 0, m - 1)
+        return S.right(jnp.take(A, idx, axis=0))
+
+    out = jax.lax.map(body, starts)
+    return out.reshape(-1, out.shape[-1])[:m]
+
+
 def fast_cur(
     A: jnp.ndarray,
     key: jax.Array,
@@ -64,11 +86,15 @@ def fast_cur(
     sketch_kind: str = "leverage",
     enforce_subset: bool = True,
     scale: bool = False,
+    streaming: bool = False,
+    block_size: int = 1024,
 ) -> CURApprox:
     """End-to-end fast CUR: uniform C/R, then the sketched Ũ (Thm 9 setup).
 
     Column-selection sketches observe only an (sc × sr) block of A plus C and R.
     Leverage sampling uses row scores of C (for S_C) and of R^T (for S_R).
+    With ``streaming=True`` the projection-sketch branch forms S_C^T A S_R via
+    ``blocked_right_sketch`` instead of transposed full-size temporaries.
     """
     m, n = A.shape
     kcr, kc, kr = jax.random.split(key, 3)
@@ -94,7 +120,10 @@ def fast_cur(
         Sr = sk.make_sketch(sketch_kind, kr, n, sr)
         ScC = Sc.left(C)
         RSr = Sr.left(R.T).T
-        ScASr = Sc.left(Sr.left(A.T).T)
+        if streaming:
+            ScASr = Sc.left(blocked_right_sketch(A, Sr, block_size))
+        else:
+            ScASr = Sc.left(Sr.left(A.T).T)
 
     U = fast_U_cur(ScC, ScASr, RSr)
     return CURApprox(C=C, U=U, R=R, col_indices=cidx, row_indices=ridx)

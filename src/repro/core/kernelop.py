@@ -1,17 +1,24 @@
-"""Implicit SPSD operators.
+"""Implicit SPSD operators with a streaming blockwise access protocol.
 
 The paper's efficiency story depends on *never* materializing the n×n kernel
-matrix (Fig. 1, Table 3 "#Entries" column).  ``KernelOperator`` exposes exactly
+matrix (Fig. 1, Table 3 "#Entries" column).  ``SPSDOperator`` exposes exactly
 the access patterns the fast model needs:
 
 - ``columns(idx)``   -> K[:, idx]           (n × c)    for C = K P
 - ``block(ri, ci)``  -> K[ri][:, ci]        (|ri|×|ci|) for S^T K S
 - ``diag()``                                            for RBF trace tricks
-- ``full()``         -> K                   (prototype model / tests only)
+- ``full()``         -> K                   (small-n tests only)
 
-``RBFKernel`` computes entries on the fly from the d-dimensional data; on TPU the
-block computation is backed by the fused Pallas kernel in
-``repro.kernels.rbf_sketch`` (see ``use_pallas``).
+plus the *streaming* protocol every large-n code path is built on:
+
+- ``map_row_panels(fn)``  -> fn applied to (b × n) row panels, ``jax.lax.map``
+  over row blocks; peak memory O(b·n), never O(n²).
+- ``matmat(V)``           -> K @ V streamed through row panels.
+- ``frobenius_norm_sq()`` -> ||K||_F² accumulated panel-by-panel.
+
+``RBFKernel`` computes entries on the fly from the d-dimensional data; on TPU
+both the block computation and the streaming matmat are backed by the fused
+Pallas kernels in ``repro.kernels.rbf_sketch`` (see ``use_pallas``).
 """
 from __future__ import annotations
 
@@ -21,15 +28,27 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+# Row panels are capped at roughly this many f32 elements (b·n), so the
+# streaming paths stay ~128 MB regardless of n.
+_PANEL_ELEMENT_BUDGET = 1 << 25
+
+
+def _panel_block_size(n: int, block_size: Optional[int]) -> int:
+    if block_size is not None:
+        return max(1, int(block_size))
+    return max(128, min(4096, _PANEL_ELEMENT_BUDGET // max(n, 1)))
+
 
 class SPSDOperator:
     n: int
 
-    def columns(self, idx: jnp.ndarray) -> jnp.ndarray:
-        raise NotImplementedError
+    # -- pointwise access ---------------------------------------------------
 
     def block(self, row_idx: jnp.ndarray, col_idx: jnp.ndarray) -> jnp.ndarray:
         raise NotImplementedError
+
+    def columns(self, idx: jnp.ndarray) -> jnp.ndarray:
+        return self.block(jnp.arange(self.n), idx)
 
     def full(self) -> jnp.ndarray:
         raise NotImplementedError
@@ -37,8 +56,45 @@ class SPSDOperator:
     def diag(self) -> jnp.ndarray:
         raise NotImplementedError
 
-    def matmat(self, V: jnp.ndarray) -> jnp.ndarray:     # K @ V
-        return self.full() @ V
+    # -- streaming protocol -------------------------------------------------
+
+    def map_row_panels(self, fn, block_size: Optional[int] = None):
+        """Apply ``fn(panel, row_idx, valid)`` to consecutive (b × n) row panels.
+
+        ``panel`` is K[row_idx, :] (tail panels are padded by clamping to the
+        last row; ``valid`` masks the padding).  Results are stacked along a
+        leading block axis — reductions sum over it, matmats reshape it away.
+        Runs under ``jax.lax.map`` so only one panel is live at a time.
+        """
+        n = self.n
+        bs = _panel_block_size(n, block_size)
+        nblocks = -(-n // bs)
+        starts = jnp.arange(nblocks) * bs
+        cols = jnp.arange(n)
+
+        def body(start):
+            idx = start + jnp.arange(bs)
+            valid = idx < n
+            idx = jnp.clip(idx, 0, n - 1)
+            return fn(self.block(idx, cols), idx, valid)
+
+        return jax.lax.map(body, starts)
+
+    def matmat(self, V: jnp.ndarray, block_size: Optional[int] = None) -> jnp.ndarray:
+        """K @ V without materializing K (footnote-2 memory trick)."""
+        V2 = V if V.ndim == 2 else V[:, None]
+        out = self.map_row_panels(lambda panel, idx, valid: panel @ V2,
+                                  block_size)
+        out = out.reshape(-1, V2.shape[1])[: self.n]
+        return out if V.ndim == 2 else out[:, 0]
+
+    def frobenius_norm_sq(self, block_size: Optional[int] = None) -> jnp.ndarray:
+        """||K||_F² accumulated over row panels (never forms K)."""
+        def fn(panel, idx, valid):
+            p32 = panel.astype(jnp.float32)
+            return jnp.sum(p32 * p32 * valid.astype(jnp.float32)[:, None])
+
+        return jnp.sum(self.map_row_panels(fn, block_size))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -69,8 +125,12 @@ class DenseSPSD(SPSDOperator):
     def diag(self):
         return jnp.diagonal(self.K)
 
-    def matmat(self, V):
+    def matmat(self, V, block_size: Optional[int] = None):
         return self.K @ V
+
+    def frobenius_norm_sq(self, block_size: Optional[int] = None):
+        K32 = self.K.astype(jnp.float32)
+        return jnp.sum(K32 * K32)
 
 
 def _sqdist(X: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
@@ -104,9 +164,6 @@ class RBFKernel(SPSDOperator):
     def _gamma(self):
         return 1.0 / (2.0 * self.sigma ** 2)
 
-    def columns(self, idx):
-        return self.block(jnp.arange(self.n), idx)
-
     def block(self, row_idx, col_idx):
         Xr = jnp.take(self.X, row_idx, axis=0)
         Xc = jnp.take(self.X, col_idx, axis=0)
@@ -121,20 +178,11 @@ class RBFKernel(SPSDOperator):
     def diag(self):
         return jnp.ones((self.n,), self.X.dtype)
 
-    def matmat(self, V, block: int = 2048):
-        """Blocked K @ V without materializing K (footnote-2 memory trick)."""
-        n = self.n
-
-        def body(i, acc):
-            idx = i * block + jnp.arange(block)
-            idx = jnp.clip(idx, 0, n - 1)
-            rows = self.block(idx, jnp.arange(n))      # (block, n)
-            return acc.at[i * block:(i + 1) * block].set(rows @ V)
-
-        nblocks = (n + block - 1) // block
-        out = jnp.zeros((nblocks * block, V.shape[1]), V.dtype)
-        out = jax.lax.fori_loop(0, nblocks, body, out)
-        return out[:n]
+    def matmat(self, V, block_size: Optional[int] = None):
+        if self.use_pallas:
+            from repro.kernels.rbf_sketch import ops as rbf_ops
+            return rbf_ops.rbf_matmat(self.X, V, self.sigma)
+        return SPSDOperator.matmat(self, V, block_size)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -167,8 +215,14 @@ class LinearKernel(SPSDOperator):
     def diag(self):
         return jnp.sum(self.X * self.X, axis=1)
 
-    def matmat(self, V):
+    def matmat(self, V, block_size: Optional[int] = None):
         return self.X @ (self.X.T @ V)
+
+    def frobenius_norm_sq(self, block_size: Optional[int] = None):
+        # ||X X^T||_F² = ||X^T X||_F² — a d×d Gram, O(nd²) and O(d²) memory.
+        G = self.X.astype(jnp.float32)
+        G = G.T @ G
+        return jnp.sum(G * G)
 
 
 def as_operator(K) -> SPSDOperator:

@@ -253,6 +253,35 @@ def count_sketch(key: jax.Array, n: int, s: int) -> CountSketch:
 
 
 # ---------------------------------------------------------------------------
+# Streaming application against implicit operators (Fig. 1 at scale)
+# ---------------------------------------------------------------------------
+
+def right_streaming(S, Kop, block_size: Optional[int] = None) -> jnp.ndarray:
+    """K S (n × s) through blocked row panels of an ``SPSDOperator``.
+
+    Each (b × n) panel K[idx, :] is sketched on the fly — ``(K S)[idx] =
+    (S^T K[idx, :]^T)^T`` — so peak memory is O(b·n + n·s); the n×n kernel is
+    never materialized.  Works for every sketch family (projection sketches
+    included) because only ``S.right`` on a panel is required.
+    """
+    if isinstance(S, GaussianSketch):
+        # S.right inside the panel loop would redraw the n×s Gaussian per
+        # panel; the explicit matrix is O(n·s) — same budget as the output —
+        # so draw it once and stream only K.
+        return Kop.matmat(S._mat(), block_size=block_size)
+    out = Kop.map_row_panels(lambda panel, idx, valid: S.right(panel),
+                             block_size)
+    return out.reshape(-1, out.shape[-1])[: Kop.n]
+
+
+def sym_streaming(S, Kop, block_size: Optional[int] = None) -> jnp.ndarray:
+    """S^T K S (s × s) via blocked K @ S then one ``S.left`` — streaming
+    counterpart of ``S.sym(K_dense)`` for implicit operators."""
+    KS = right_streaming(S, Kop, block_size)
+    return S.left(KS)
+
+
+# ---------------------------------------------------------------------------
 # Factory
 # ---------------------------------------------------------------------------
 

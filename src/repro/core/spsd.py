@@ -9,18 +9,27 @@ differ only in U (Table 1):
 
 ``fast_spsd`` is Algorithm 1 end-to-end (with the §4.5 tricks: P ⊂ S and
 unscaled leverage sampling by default).
+
+Every large-n path streams through the blockwise operator protocol
+(``SPSDOperator.map_row_panels`` / ``matmat``): projection sketches, the
+prototype U, and the error metrics all run at n ≫ 10⁴ without ever
+allocating an n×n array.  ``fast_model_batched`` vmaps Algorithm 1 over a
+stacked batch of same-shape kernels.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sketch as sk
-from repro.core.kernelop import SPSDOperator, as_operator
+from repro.core.kernelop import DenseSPSD, SPSDOperator, as_operator
 from repro.core.leverage import pinv, row_leverage_scores
+
+# Below this n the dense error metrics are cheap and exact; above it the
+# "auto" policy switches to the streaming estimators.
+_DENSE_N_CUTOFF = 2048
 
 
 class SPSDApprox(NamedTuple):
@@ -40,10 +49,17 @@ class SPSDApprox(NamedTuple):
 # U matrices
 # ---------------------------------------------------------------------------
 
-def prototype_U(K: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
-    """U* = argmin_U ||K - C U C^T||_F = C† K (C†)^T  (Eq. 4)."""
-    Cp = pinv(C)
-    return Cp @ K.astype(Cp.dtype) @ Cp.T
+def prototype_U(K, C: jnp.ndarray,
+                block_size: Optional[int] = None) -> jnp.ndarray:
+    """U* = argmin_U ||K - C U C^T||_F = C† K (C†)^T  (Eq. 4).
+
+    K may be dense or any ``SPSDOperator``; K (C†)^T is streamed through
+    ``matmat`` so implicit kernels are never densified.
+    """
+    Kop = as_operator(K)
+    Cp = pinv(C)                                          # (c, n) f32
+    KCpT = Kop.matmat(Cp.T, block_size=block_size)        # (n, c)
+    return Cp @ KCpT.astype(Cp.dtype)
 
 
 def nystrom_U(W: jnp.ndarray) -> jnp.ndarray:
@@ -72,9 +88,10 @@ def sample_C(Kop: SPSDOperator, key: jax.Array, c: int) -> SPSDApprox:
     return SPSDApprox(C=C, U=jnp.eye(c, dtype=C.dtype), P_indices=idx)
 
 
-def prototype_model(K, C: jnp.ndarray, P_indices=None) -> SPSDApprox:
+def prototype_model(K, C: jnp.ndarray, P_indices=None,
+                    block_size: Optional[int] = None) -> SPSDApprox:
     Kop = as_operator(K)
-    U = prototype_U(Kop.full(), C)
+    U = prototype_U(Kop, C, block_size=block_size)
     return SPSDApprox(C=C, U=U, P_indices=P_indices)
 
 
@@ -95,12 +112,17 @@ def fast_model_from_C(
     s_sketch: str = "leverage",
     enforce_subset: bool = True,
     scale: bool = False,
+    streaming: Optional[bool] = None,
+    block_size: Optional[int] = None,
 ) -> SPSDApprox:
     """Algorithm 1 given a fixed C (any provenance).
 
     ``s_sketch`` ∈ {uniform, leverage, gaussian, srht, countsketch}.
-    Column-selection sketches read only an s×s block of K (Fig. 1);
-    projection sketches need K (or an operator able to form K S).
+    Column-selection sketches read only an s×s block of K (Fig. 1).
+    Projection sketches form S^T K S through blocked K @ S
+    (``sketch.sym_streaming``) unless ``streaming=False`` forces the dense
+    route; default is streaming for every implicit operator, dense only for
+    an already-materialized ``DenseSPSD``.
     """
     Kop = as_operator(K)
     n = Kop.n
@@ -119,7 +141,12 @@ def fast_model_from_C(
     else:
         S = sk.make_sketch(s_sketch, key, n, s)
         StC = S.left(C)
-        StKS = S.sym(Kop.full())
+        if streaming is None:
+            streaming = not isinstance(Kop, DenseSPSD)
+        if streaming:
+            StKS = sk.sym_streaming(S, Kop, block_size=block_size)
+        else:
+            StKS = S.sym(Kop.full())
 
     U = fast_U(StC, StKS)
     return SPSDApprox(C=C, U=U, P_indices=P_indices)
@@ -133,6 +160,8 @@ def fast_model(
     s_sketch: str = "leverage",
     enforce_subset: bool = True,
     scale: bool = False,
+    streaming: Optional[bool] = None,
+    block_size: Optional[int] = None,
 ) -> SPSDApprox:
     """Algorithm 1 end-to-end: uniform C = KP, then the fast U."""
     Kop = as_operator(K)
@@ -141,24 +170,160 @@ def fast_model(
     return fast_model_from_C(
         Kop, base.C, ks, s,
         P_indices=base.P_indices, s_sketch=s_sketch,
-        enforce_subset=enforce_subset, scale=scale)
+        enforce_subset=enforce_subset, scale=scale,
+        streaming=streaming, block_size=block_size)
+
+
+def fast_model_batched(
+    Ks,
+    keys: jax.Array,
+    c: int,
+    s: int,
+    s_sketch: str = "leverage",
+    enforce_subset: bool = True,
+    scale: bool = False,
+    streaming: Optional[bool] = None,
+    block_size: Optional[int] = None,
+) -> SPSDApprox:
+    """Algorithm 1 vmapped over a batch of kernels.
+
+    ``Ks`` is one operator pytree whose leaves carry a leading batch axis —
+    e.g. ``RBFKernel(X_batch)`` with ``X_batch`` of shape (B, n, d), or
+    ``DenseSPSD(K_batch)`` with (B, n, n) — and ``keys`` has shape (B, 2) as
+    produced by ``jax.random.split``.  Returns an ``SPSDApprox`` whose fields
+    are stacked along the batch axis.  Whole-batch work runs in one XLA
+    computation, so many moderate kernels (hyperparameter sweeps, per-class
+    Gram matrices) amortize compilation and saturate the accelerator.
+    """
+    if not isinstance(Ks, SPSDOperator):
+        Ks = DenseSPSD(jnp.asarray(Ks))
+
+    def one(op, key):
+        return fast_model(op, key, c=c, s=s, s_sketch=s_sketch,
+                          enforce_subset=enforce_subset, scale=scale,
+                          streaming=streaming, block_size=block_size)
+
+    return jax.vmap(one)(Ks, keys)
 
 
 # ---------------------------------------------------------------------------
-# Error metric used throughout the paper's §6
+# Error metrics used throughout the paper's §6
+#
+# Three evaluation methods, selected by ``method``:
+#   dense       exact, materializes K — small n only.
+#   blocked     exact, accumulates ||K - CUC^T||_F² over row panels; O(b·n)
+#               memory, reads each kernel entry once.
+#   hutchinson  stochastic: ||R||_F² = E_z ||R z||² over Rademacher probes;
+#               one streaming K @ Z pass serves numerator and denominator.
+#   auto        dense below _DENSE_N_CUTOFF (or for DenseSPSD), else blocked.
 # ---------------------------------------------------------------------------
 
-def relative_error(K, approx: SPSDApprox) -> jnp.ndarray:
+def _resolve_error_method(Kop: SPSDOperator, method: str) -> str:
+    if method != "auto":
+        return method
+    if isinstance(Kop, DenseSPSD) or Kop.n <= _DENSE_N_CUTOFF:
+        return "dense"
+    # "blocked" is exact with the same O(b·n) memory guarantee, so the default
+    # never silently trades accuracy; the stochastic estimator is opt-in.
+    return "blocked"
+
+
+def _blocked_residual_fro2(Kop: SPSDOperator, approx: SPSDApprox,
+                           block_size: Optional[int]):
+    """(||K - CUC^T||_F², ||K||_F²) in one streaming pass."""
+    C32 = approx.C.astype(jnp.float32)
+    M = approx.U.astype(jnp.float32) @ C32.T              # (c, n)
+
+    def fn(panel, idx, valid):
+        p32 = panel.astype(jnp.float32)
+        resid = p32 - jnp.take(C32, idx, axis=0) @ M
+        v = valid.astype(jnp.float32)[:, None]
+        return (jnp.sum(resid * resid * v), jnp.sum(p32 * p32 * v))
+
+    num_parts, den_parts = Kop.map_row_panels(fn, block_size)
+    return jnp.sum(num_parts), jnp.sum(den_parts)
+
+
+def _hutchinson_residual_fro2(Kop: SPSDOperator, approx: SPSDApprox,
+                              probes: int, key: jax.Array,
+                              block_size: Optional[int]):
+    """Rademacher estimates of (||K - CUC^T||_F², ||K||_F²)."""
+    Z = jax.random.rademacher(key, (Kop.n, probes), dtype=jnp.float32)
+    KZ = Kop.matmat(Z, block_size=block_size).astype(jnp.float32)
+    RZ = KZ - approx.matmat(Z).astype(jnp.float32)
+    return jnp.sum(RZ * RZ) / probes, jnp.sum(KZ * KZ) / probes
+
+
+def relative_error(K, approx: SPSDApprox, method: str = "auto",
+                   block_size: Optional[int] = None, probes: int = 64,
+                   key: Optional[jax.Array] = None) -> jnp.ndarray:
     """||K - C U C^T||_F² / ||K||_F²  (Fig. 3/4 y-axis)."""
-    Kd = as_operator(K).full().astype(jnp.float32)
-    R = Kd - approx.dense().astype(jnp.float32)
-    return jnp.sum(R * R) / jnp.sum(Kd * Kd)
+    Kop = as_operator(K)
+    method = _resolve_error_method(Kop, method)
+    if method == "dense":
+        Kd = Kop.full().astype(jnp.float32)
+        R = Kd - approx.dense().astype(jnp.float32)
+        return jnp.sum(R * R) / jnp.sum(Kd * Kd)
+    if method == "blocked":
+        num, den = _blocked_residual_fro2(Kop, approx, block_size)
+        return num / den
+    if method == "hutchinson":
+        key = jax.random.PRNGKey(0) if key is None else key
+        num, den = _hutchinson_residual_fro2(Kop, approx, probes, key,
+                                             block_size)
+        return num / den
+    raise ValueError(f"unknown error method {method!r}")
 
 
-def error_vs_best_rank_k(K, approx: SPSDApprox, k: int) -> jnp.ndarray:
-    """||K - CUC^T||_F² / ||K - K_k||_F²  (the 1+ε target of Thm 3/Remark 4)."""
-    Kd = as_operator(K).full().astype(jnp.float32)
-    evals = jnp.linalg.eigvalsh(Kd)
-    tail = jnp.sum(jnp.sort(evals ** 2)[: Kd.shape[0] - k])
-    R = Kd - approx.dense().astype(jnp.float32)
-    return jnp.sum(R * R) / tail
+def streaming_topk_eigvals(K, k: int, key: Optional[jax.Array] = None,
+                           oversample: int = 8, power_iters: int = 2,
+                           block_size: Optional[int] = None) -> jnp.ndarray:
+    """Top-k eigenvalues of an SPSD operator via randomized subspace iteration.
+
+    Halko-Martinsson-Tropp: Y = K Ω, a few power passes, then the Rayleigh
+    quotient Q^T K Q — every K application streams through ``matmat``, so the
+    cost is (2 + power_iters) blocked passes and O(n·(k+p)) memory.
+    """
+    Kop = as_operator(K)
+    key = jax.random.PRNGKey(0) if key is None else key
+    q = min(Kop.n, k + oversample)
+    Y = Kop.matmat(jax.random.normal(key, (Kop.n, q), dtype=jnp.float32),
+                   block_size=block_size)
+    for _ in range(power_iters):
+        Q, _ = jnp.linalg.qr(Y)
+        Y = Kop.matmat(Q, block_size=block_size)
+    Q, _ = jnp.linalg.qr(Y)
+    B = Q.T @ Kop.matmat(Q, block_size=block_size)
+    B = 0.5 * (B + B.T)
+    lam = jnp.linalg.eigvalsh(B)[::-1]
+    return lam[:k]
+
+
+def error_vs_best_rank_k(K, approx: SPSDApprox, k: int, method: str = "auto",
+                         block_size: Optional[int] = None, probes: int = 64,
+                         key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """||K - CUC^T||_F² / ||K - K_k||_F²  (the 1+ε target of Thm 3/Remark 4).
+
+    Streaming methods use ||K - K_k||_F² = ||K||_F² - Σ_{i≤k} λ_i² (K SPSD)
+    with the top spectrum from ``streaming_topk_eigvals``.
+    """
+    Kop = as_operator(K)
+    method = _resolve_error_method(Kop, method)
+    if method == "dense":
+        Kd = Kop.full().astype(jnp.float32)
+        evals = jnp.linalg.eigvalsh(Kd)
+        tail = jnp.sum(jnp.sort(evals ** 2)[: Kd.shape[0] - k])
+        R = Kd - approx.dense().astype(jnp.float32)
+        return jnp.sum(R * R) / tail
+    key = jax.random.PRNGKey(0) if key is None else key
+    keig, kprobe = jax.random.split(key)
+    lam = streaming_topk_eigvals(Kop, k, keig, block_size=block_size)
+    if method == "blocked":
+        num, fro2 = _blocked_residual_fro2(Kop, approx, block_size)
+    elif method == "hutchinson":
+        num, fro2 = _hutchinson_residual_fro2(Kop, approx, probes, kprobe,
+                                              block_size)
+    else:
+        raise ValueError(f"unknown error method {method!r}")
+    tail = jnp.maximum(fro2 - jnp.sum(lam ** 2), 1e-12 * fro2)
+    return num / tail

@@ -48,6 +48,67 @@ def _rbf_block_kernel(xr_ref, xc_ref, o_ref, *, gamma: float):
     o_ref[...] = jnp.exp(-gamma * sq)
 
 
+def _rbf_matmat_kernel(xr_ref, xc_ref, v_ref, o_ref, *, gamma: float):
+    """One (BLOCK_R, m) output tile of K(Xr, Xc) @ V, accumulated over the
+    column-tile grid axis.
+
+    The (BLOCK_R, BLOCK_C) kernel tile lives only in VMEM/registers: it is
+    produced on the MXU/VPU and immediately contracted against the matching
+    (BLOCK_C, m) tile of V, so HBM traffic is O((nr + nc)·d + nc·m + nr·m)
+    instead of O(nr·nc) for staging K.
+
+    xr_ref: (BLOCK_R, d) row points        — revisited across j
+    xc_ref: (BLOCK_C, d) column points     — walks the contraction axis j
+    v_ref:  (BLOCK_C, m) right-hand tile   — walks j in lockstep with xc
+    o_ref:  (BLOCK_R, m) accumulator tile
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xr = xr_ref[...].astype(jnp.float32)
+    xc = xc_ref[...].astype(jnp.float32)
+    cross = jax.lax.dot_general(
+        xr, xc,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    rr = jnp.sum(xr * xr, axis=1, keepdims=True)
+    cc = jnp.sum(xc * xc, axis=1, keepdims=True)
+    k_tile = jnp.exp(-gamma * jnp.maximum(rr + cc.T - 2.0 * cross, 0.0))
+    o_ref[...] += jax.lax.dot_general(
+        k_tile, v_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def rbf_matmat_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, V: jnp.ndarray,
+                      sigma: float, interpret: bool = False) -> jnp.ndarray:
+    """K(Xr, Xc) @ V over padded inputs; all dims must be tile multiples."""
+    nr, d = Xr.shape
+    nc, m = V.shape
+    assert Xc.shape[0] == nc and nr % BLOCK_R == 0 and nc % BLOCK_C == 0, \
+        (Xr.shape, Xc.shape, V.shape)
+    assert m % 128 == 0, m
+    gamma = 1.0 / (2.0 * float(sigma) ** 2)
+    grid = (nr // BLOCK_R, nc // BLOCK_C)
+    return pl.pallas_call(
+        functools.partial(_rbf_matmat_kernel, gamma=gamma),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_C, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, m), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nr, m), jnp.float32),
+        interpret=interpret,
+    )(Xr, Xc, V)
+
+
 def rbf_block_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float,
                      interpret: bool = False) -> jnp.ndarray:
     """Pallas call over padded inputs; shapes must be multiples of the tiles."""

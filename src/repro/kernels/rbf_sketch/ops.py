@@ -39,6 +39,37 @@ def rbf_block(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float,
     return out[:nr, :nc]
 
 
+def _pad_cols(V: jnp.ndarray, mult: int) -> jnp.ndarray:
+    m = V.shape[1]
+    pad = (-m) % mult
+    if pad == 0:
+        return V
+    return jnp.pad(V, ((0, 0), (0, pad)))
+
+
+@partial(jax.jit, static_argnames=("sigma", "use_pallas"))
+def rbf_matmat(X: jnp.ndarray, V: jnp.ndarray, sigma: float,
+               use_pallas: bool = True) -> jnp.ndarray:
+    """K(X, X) @ V fused: kernel tiles never leave VMEM (streaming matmat).
+
+    Row/column point counts are zero-padded to tile multiples; padded columns
+    of K meet zero-padded rows of V, so their contribution vanishes, and
+    padded output rows are sliced away.
+    """
+    if not use_pallas:
+        return _ref.rbf_matmat(X, V, sigma)
+    n = X.shape[0]
+    squeeze = V.ndim == 1
+    V2 = V[:, None] if squeeze else V
+    m = V2.shape[1]
+    mult = max(_k.BLOCK_R, _k.BLOCK_C)
+    Xp = _pad_rows(X, mult)
+    Vp = _pad_cols(_pad_rows(V2, mult), 128)
+    out = _k.rbf_matmat_padded(Xp, Xp, Vp, sigma, interpret=_INTERPRET)
+    out = out[:n, :m]
+    return out[:, 0] if squeeze else out
+
+
 @partial(jax.jit, static_argnames=("sigma",))
 def sketched_gram(Xs: jnp.ndarray, sigma: float,
                   scales: jnp.ndarray | None = None) -> jnp.ndarray:

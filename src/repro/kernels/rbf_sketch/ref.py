@@ -16,6 +16,11 @@ def rbf_block(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float) -> jnp.ndarray:
     return jnp.exp(-gamma * sq)
 
 
+def rbf_matmat(X: jnp.ndarray, V: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    """K(X, X) @ V oracle (materializes K — small shapes only)."""
+    return rbf_block(X, X, sigma) @ V.astype(jnp.float32)
+
+
 def sketched_gram(Xs: jnp.ndarray, sigma: float,
                   scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """S^T K S for a column-selection sketch: rows Xs = X[S.indices]."""

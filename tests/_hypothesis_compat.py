@@ -1,0 +1,43 @@
+"""Graceful degradation when ``hypothesis`` is absent.
+
+``pip install -r requirements-dev.txt`` provides hypothesis in CI; on bare
+environments the property-based tests must *skip*, not kill collection of
+their entire module (most tests in those modules are plain pytest).  A
+module-level ``pytest.importorskip("hypothesis")`` would throw away the whole
+module, so instead we export drop-in shims: ``@given`` wraps the test into an
+immediate skip, ``@settings`` is a no-op, and ``st.<anything>(...)`` returns
+inert placeholders.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                       # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategies:
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _InertStrategies()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # No functools.wraps: the zero-arg signature must be what pytest
+            # sees, or it would treat the strategy params as missing fixtures.
+            def wrapper():
+                pytest.importorskip("hypothesis")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

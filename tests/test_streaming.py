@@ -1,0 +1,228 @@
+"""Streaming blockwise pipeline: parity with the dense paths, the no-n×n
+memory guarantee, and the vmapped batched entry point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cur, spsd
+from repro.core import sketch as sk
+from repro.core.kernelop import DenseSPSD, LinearKernel, RBFKernel
+
+
+def _clustered(seed, n=400, d=8, k=8):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 2.5
+    labels = rng.integers(0, k, size=n)
+    X = centers[labels] + rng.normal(size=(n, d)) * 0.4
+    return jnp.asarray(X, jnp.float32)
+
+
+def _rbf(seed, n=400, sigma=2.0, **kw):
+    return RBFKernel(_clustered(seed, n=n), sigma=sigma, **kw)
+
+
+# ---------------------------------------------------------------------------
+# operator protocol: matmat / frobenius / panels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_size", [None, 64, 1000])
+def test_streaming_matmat_matches_dense(block_size):
+    Kop = _rbf(0)
+    V = jax.random.normal(jax.random.PRNGKey(1), (Kop.n, 5))
+    out = Kop.matmat(V, block_size=block_size)
+    ref = Kop.full() @ V
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_streaming_frobenius_matches_dense():
+    for Kop in (_rbf(1), LinearKernel(_clustered(2)),
+                DenseSPSD(_rbf(3, n=100).full())):
+        got = float(Kop.frobenius_norm_sq(block_size=96))
+        ref = float(jnp.sum(Kop.full().astype(jnp.float32) ** 2))
+        assert got == pytest.approx(ref, rel=1e-4), type(Kop).__name__
+
+
+def test_panel_padding_is_masked():
+    """n not divisible by the block: clamped tail rows must not leak."""
+    Kop = _rbf(4, n=333)
+    got = float(Kop.frobenius_norm_sq(block_size=100))
+    ref = float(jnp.sum(Kop.full() ** 2))
+    assert got == pytest.approx(ref, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# projection sketches: streaming vs dense S^T K S, and through fast_model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "srht", "countsketch"])
+def test_sym_streaming_matches_dense(kind):
+    Kop = _rbf(5)
+    S = sk.make_sketch(kind, jax.random.PRNGKey(2), Kop.n, 60)
+    dense = S.sym(Kop.full())
+    stream = sk.sym_streaming(S, Kop, block_size=128)
+    np.testing.assert_allclose(np.asarray(stream), np.asarray(dense),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("kind", ["gaussian", "srht", "countsketch"])
+def test_fast_model_projection_streaming_vs_dense(kind):
+    """Same key -> same sketch -> the two StKS routes give the same U."""
+    Kop = _rbf(6)
+    base = spsd.sample_C(Kop, jax.random.PRNGKey(0), 20)
+    kw = dict(P_indices=base.P_indices, s_sketch=kind)
+    ap_s = spsd.fast_model_from_C(Kop, base.C, jax.random.PRNGKey(1), 80,
+                                  streaming=True, **kw)
+    ap_d = spsd.fast_model_from_C(Kop, base.C, jax.random.PRNGKey(1), 80,
+                                  streaming=False, **kw)
+    np.testing.assert_allclose(np.asarray(ap_s.U), np.asarray(ap_d.U),
+                               rtol=2e-2, atol=1e-3)
+    e_s = float(spsd.relative_error(Kop, ap_s))
+    e_d = float(spsd.relative_error(Kop, ap_d))
+    assert np.isfinite(e_s) and abs(e_s - e_d) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# error metrics
+# ---------------------------------------------------------------------------
+
+def test_blocked_error_metrics_match_dense():
+    Kop = _rbf(7)
+    ap = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=20, s=80,
+                         s_sketch="uniform")
+    e_dense = float(spsd.relative_error(Kop, ap, method="dense"))
+    e_block = float(spsd.relative_error(Kop, ap, method="blocked",
+                                        block_size=90))
+    assert e_block == pytest.approx(e_dense, rel=1e-3)
+    k = 8
+    ek_dense = float(spsd.error_vs_best_rank_k(Kop, ap, k, method="dense"))
+    ek_block = float(spsd.error_vs_best_rank_k(Kop, ap, k, method="blocked"))
+    # streaming denominator uses randomized top-k eigenvalues
+    assert ek_block == pytest.approx(ek_dense, rel=0.05)
+
+
+def test_hutchinson_error_tracks_dense():
+    Kop = _rbf(8)
+    ap = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=20, s=80,
+                         s_sketch="uniform")
+    e_dense = float(spsd.relative_error(Kop, ap, method="dense"))
+    e_hutch = float(spsd.relative_error(Kop, ap, method="hutchinson",
+                                        probes=256,
+                                        key=jax.random.PRNGKey(3)))
+    assert e_hutch == pytest.approx(e_dense, rel=0.35)
+
+
+def test_streaming_topk_eigvals():
+    Kop = _rbf(9)
+    lam = np.asarray(spsd.streaming_topk_eigvals(Kop, 6,
+                                                 jax.random.PRNGKey(0)))
+    ref = np.linalg.eigvalsh(np.asarray(Kop.full()))[::-1][:6]
+    np.testing.assert_allclose(lam, ref, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# the memory guarantee: streaming paths never densify K
+# ---------------------------------------------------------------------------
+
+def test_streaming_pipeline_never_calls_full(monkeypatch):
+    """End-to-end fast model + streaming metrics with ``full`` booby-trapped."""
+    Kop = _rbf(10)
+
+    def boom(self):
+        raise AssertionError("streaming path materialized the n×n kernel")
+
+    monkeypatch.setattr(RBFKernel, "full", boom)
+    ap = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=20, s=80,
+                         s_sketch="gaussian")        # auto-streams: implicit op
+    e = float(spsd.relative_error(Kop, ap, method="hutchinson", probes=32,
+                                  key=jax.random.PRNGKey(1)))
+    eb = float(spsd.relative_error(Kop, ap, method="blocked"))
+    ek = float(spsd.error_vs_best_rank_k(Kop, ap, 8, method="hutchinson",
+                                         probes=32))
+    U = spsd.prototype_U(Kop, ap.C)
+    assert np.isfinite(e) and np.isfinite(eb) and np.isfinite(ek)
+    assert np.all(np.isfinite(np.asarray(U)))
+
+
+def test_adaptive_sampling_never_calls_full(monkeypatch):
+    from repro.core.adaptive import uniform_adaptive2_indices
+    Kop = _rbf(11)
+    monkeypatch.setattr(RBFKernel, "full", lambda self: (_ for _ in ()).throw(
+        AssertionError("adaptive sampling materialized K")))
+    idx = uniform_adaptive2_indices(Kop, jax.random.PRNGKey(0), 12)
+    assert idx.shape == (12,)
+
+
+# ---------------------------------------------------------------------------
+# batched entry point
+# ---------------------------------------------------------------------------
+
+def test_fast_model_batched_matches_per_item():
+    rng = np.random.default_rng(0)
+    Xb = jnp.asarray(rng.normal(size=(4, 200, 6)), jnp.float32)
+    ops = RBFKernel(Xb, sigma=1.5)
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    bat = spsd.fast_model_batched(ops, keys, c=12, s=48, s_sketch="uniform")
+    assert bat.C.shape == (4, 200, 12) and bat.U.shape == (4, 12, 12)
+    for i in (0, 2):
+        one = spsd.fast_model(RBFKernel(Xb[i], sigma=1.5), keys[i],
+                              c=12, s=48, s_sketch="uniform")
+        np.testing.assert_allclose(np.asarray(bat.U[i]), np.asarray(one.U),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_fast_model_batched_dense_input():
+    rng = np.random.default_rng(1)
+    Y = jnp.asarray(rng.normal(size=(3, 100, 5)), jnp.float32)
+    Kb = jnp.einsum("bnd,bmd->bnm", Y, Y)
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    bat = spsd.fast_model_batched(Kb, keys, c=8, s=24, s_sketch="uniform")
+    assert bat.U.shape == (3, 8, 8)
+    assert np.all(np.isfinite(np.asarray(bat.U)))
+
+
+# ---------------------------------------------------------------------------
+# CUR streaming branch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "srht", "countsketch"])
+def test_fast_cur_streaming_matches_dense(kind):
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.normal(size=(250, 180)), jnp.float32)
+    kw = dict(c=12, r=12, sc=48, sr=48, sketch_kind=kind)
+    ap_s = cur.fast_cur(A, jax.random.PRNGKey(3), streaming=True, **kw)
+    ap_d = cur.fast_cur(A, jax.random.PRNGKey(3), streaming=False, **kw)
+    np.testing.assert_allclose(np.asarray(ap_s.U), np.asarray(ap_d.U),
+                               rtol=5e-3, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance-scale run (slow: one streaming pass over 2.5e9 entries)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_fast_model_streaming_n50k():
+    """n=50,000: Algorithm 1 with a gaussian projection sketch + streaming
+    error metrics, with ``full`` booby-trapped — a dense K would be 10 GB."""
+    n = 50_000
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(32, 16)) * 2.0
+    labels = rng.integers(0, 32, size=n)
+    X = jnp.asarray(centers[labels] + rng.normal(size=(n, 16)) * 0.5,
+                    jnp.float32)
+    Kop = RBFKernel(X, sigma=3.0)
+
+    import unittest.mock as mock
+    with mock.patch.object(RBFKernel, "full",
+                           side_effect=AssertionError("densified 50k kernel")):
+        c, s = 100, 400
+        ap = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=c, s=s,
+                             s_sketch="gaussian")
+        err = float(spsd.relative_error(Kop, ap, method="hutchinson",
+                                        probes=8, key=jax.random.PRNGKey(1)))
+        ek = float(spsd.error_vs_best_rank_k(Kop, ap, 32,
+                                             method="hutchinson", probes=8,
+                                             key=jax.random.PRNGKey(2)))
+    assert np.isfinite(err) and 0.0 <= err < 1.0, err
+    assert np.isfinite(ek) and ek > 0.0, ek
