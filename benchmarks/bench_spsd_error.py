@@ -84,17 +84,24 @@ def run_scaling(ns, seed: int = 0, s_kind: str = "gaussian",
                 probes: int = 16):
     """n-scaling sweep: the fast model + streaming metrics at growing n.
 
-    Everything here goes through the blockwise protocol — no n×n array exists
-    at any point, so n is bounded by O(n·c) memory, not O(n²).
+    Everything here goes through the single-sweep panel engine — no n×n
+    array exists at any point, so n is bounded by O(n·c) memory, not O(n²).
+    Each size is timed twice: the PR-1 sequence (model sweep, then a second
+    sweep for the Hutchinson error) and the fused ``fast_model_with_error``
+    (model + error from ONE pass over the kernel row panels); the ratio is
+    the measured speedup of this PR, with kernel-entry counts from
+    ``CountingOperator``.
     """
+    from repro.core.instrument import CountingOperator
     rows = []
     for n in ns:
         X, _ = make_dataset("letters", seed=seed, n=n)
         # sigma=1 leaves K near-identity on the standardized 16-d mixture
         # (no low-rank structure to capture); 3.0 matches the eta~0.9 regime
-        Kop = RBFKernel(X, sigma=3.0)
+        Kop = CountingOperator(RBFKernel(X, sigma=3.0))
         c = max(n // 200, 32)
         s = 4 * c
+
         t0 = time.perf_counter()
         ap = spsd.fast_model(Kop, jax.random.PRNGKey(seed), c=c, s=s,
                              s_sketch=s_kind, streaming=True)
@@ -105,12 +112,33 @@ def run_scaling(ns, seed: int = 0, s_kind: str = "gaussian",
                                         probes=probes,
                                         key=jax.random.PRNGKey(1)))
         t_err = time.perf_counter() - t0
-        rows.append((n, c, s, f"{t_model:8.2f}", f"{t_err:8.2f}",
-                     f"{err:.5f}", f"{n * c + (s - c) ** 2:>12,}"))
+        entries_sep = Kop.counts["entries"]
+
+        Kop.reset()
+        t0 = time.perf_counter()
+        ap2, err2 = spsd.fast_model_with_error(
+            Kop, jax.random.PRNGKey(seed), c=c, s=s, s_sketch=s_kind,
+            probes=probes, error_key=jax.random.PRNGKey(1))
+        jax.block_until_ready(ap2.U)
+        err2 = float(err2)
+        t_fused = time.perf_counter() - t0
+        entries_fused = Kop.counts["entries"]
+
+        speedup = (t_model + t_err) / max(t_fused, 1e-9)
+        rows.append(dict(n=n, c=c, s=s, model_s=t_model, err_s=t_err,
+                         fused_s=t_fused, speedup=speedup, rel_err=err,
+                         rel_err_fused=err2, entries_separate=entries_sep,
+                         entries_fused=entries_fused))
     print_table(f"n-scaling sweep (fast[{s_kind}], streaming, hutchinson "
                 f"q={probes})",
-                ["n", "c", "s", "model s", "err s", "rel err", "#K entries"],
-                rows)
+                ["n", "c", "s", "model s", "err s", "fused s", "speedup",
+                 "rel err", "rel err (fused)", "#K sep", "#K fused"],
+                [(r["n"], r["c"], r["s"], f"{r['model_s']:8.2f}",
+                  f"{r['err_s']:8.2f}", f"{r['fused_s']:8.2f}",
+                  f"{r['speedup']:5.2f}x", f"{r['rel_err']:.5f}",
+                  f"{r['rel_err_fused']:.5f}",
+                  f"{r['entries_separate']:>12,}",
+                  f"{r['entries_fused']:>12,}") for r in rows])
     return rows
 
 

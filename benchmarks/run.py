@@ -2,33 +2,69 @@
 
     PYTHONPATH=src python -m benchmarks.run            # CPU-sized defaults
     PYTHONPATH=src python -m benchmarks.run --only cur time
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI pass + JSON artifact
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 SUITES = ["spsd_error", "spsd_error_adaptive", "kpca", "spectral", "cur",
           "time", "landmark", "ablations"]
 
+SMOKE_JSON = os.path.join("results", "BENCH_smoke.json")
 
-def smoke() -> int:
+
+def smoke(out: str = SMOKE_JSON) -> int:
     """Tiny-shape pass over every perf entry point, CI-sized (~1 min CPU).
 
     Exercises the argument plumbing and the streaming code paths so the
-    benchmark suite cannot bit-rot; numbers produced here are meaningless.
+    benchmark suite cannot bit-rot, and writes ``results/BENCH_smoke.json``
+    (per-step wall time + the fused-vs-separate scaling rows) so CI can
+    archive the perf trajectory per PR.  Absolute numbers at these shapes
+    are noise; trends and the speedup ratio are the signal.
     """
+    import jax
     t0 = time.time()
     from benchmarks import bench_cur, bench_spsd_error, bench_time
-    bench_spsd_error.main(["--datasets", "letters", "--n", "400"])
-    bench_spsd_error.main(["--datasets", "letters", "--n", "400",
-                           "--streaming", "--probes", "32"])
-    bench_spsd_error.main(["--scaling-ns", "3000"])
-    bench_time.main(["--ns", "400", "800"])
-    bench_time.main(["--ns", "400", "800", "--streaming"])
-    bench_cur.main([])
-    print(f"\nsmoke benchmarks completed in {time.time() - t0:.1f}s")
+    steps = {}
+
+    def step(name, fn):
+        t = time.time()
+        out_val = fn()
+        steps[name] = round(time.time() - t, 3)
+        return out_val
+
+    step("spsd_error_dense",
+         lambda: bench_spsd_error.main(["--datasets", "letters", "--n", "400"]))
+    step("spsd_error_streaming",
+         lambda: bench_spsd_error.main(["--datasets", "letters", "--n", "400",
+                                        "--streaming", "--probes", "32"]))
+    scaling = step("spsd_error_scaling",
+                   lambda: bench_spsd_error.run_scaling([3000]))
+    step("time", lambda: bench_time.main(["--ns", "400", "800"]))
+    step("time_streaming",
+         lambda: bench_time.main(["--ns", "400", "800", "--streaming"]))
+    step("cur", lambda: bench_cur.main([]))
+
+    payload = {
+        "total_seconds": round(time.time() - t0, 3),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "steps_seconds": steps,
+        "scaling": scaling,
+    }
+    out_dir = os.path.dirname(out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nsmoke benchmarks completed in {payload['total_seconds']:.1f}s "
+          f"-> {out}")
     return 0
 
 
@@ -38,9 +74,11 @@ def main(argv=None):
                    help=f"subset of {SUITES}")
     p.add_argument("--smoke", action="store_true",
                    help="tiny-shape CI pass over the perf entry points")
+    p.add_argument("--smoke-out", default=SMOKE_JSON,
+                   help="where --smoke writes its JSON summary")
     args = p.parse_args(argv)
     if args.smoke:
-        return smoke()
+        return smoke(args.smoke_out)
     picked = args.only or SUITES
 
     t0 = time.time()

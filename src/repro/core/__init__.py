@@ -4,19 +4,26 @@ Public API re-exports.
 """
 from repro.core.kernelop import (DenseSPSD, LinearKernel, RBFKernel,
                                  SPSDOperator, as_operator)
-from repro.core.leverage import (column_leverage_scores, orthonormal_basis,
-                                 pinv, row_coherence, row_leverage_scores)
+from repro.core.sweep import (ColumnGatherPlan, DiagPlan, FrobeniusPlan,
+                              GramPlan, MatmulPlan, ProjResidualColNormPlan,
+                              ResidualFroPlan, RowQuadFormPlan,
+                              SketchRightPlan, mesh_data_size, sweep_panels)
+from repro.core.instrument import CountingOperator
+from repro.core.leverage import (column_leverage_scores,
+                                 column_leverage_scores_gram,
+                                 orthonormal_basis, pinv, row_coherence,
+                                 row_leverage_scores, row_leverage_scores_gram)
 from repro.core.sketch import (SKETCH_KINDS, ColumnSketch, CountSketch,
-                               GaussianSketch, SRHTSketch, count_sketch, fwht,
-                               leverage_column_sketch, make_sketch,
-                               right_streaming, srht_sketch,
-                               subset_union_sketch, sym_streaming,
+                               GaussianSketch, MaskedSketch, SRHTSketch,
+                               count_sketch, fwht, leverage_column_sketch,
+                               make_sketch, plan_for_sketch, right_streaming,
+                               srht_sketch, subset_union_sketch, sym_streaming,
                                uniform_column_sketch)
 from repro.core.spsd import (SPSDApprox, error_vs_best_rank_k, fast_U,
                              fast_model, fast_model_batched, fast_model_from_C,
-                             nystrom_U, nystrom_model, prototype_U,
-                             prototype_model, relative_error, sample_C,
-                             streaming_topk_eigvals)
+                             fast_model_with_error, nystrom_U, nystrom_model,
+                             prototype_U, prototype_model, relative_error,
+                             sample_C, streaming_topk_eigvals)
 from repro.core.cur import (CURApprox, adaptive_row_indices,
                             blocked_right_sketch, drineas08_U, fast_U_cur,
                             fast_cur, optimal_U, optimal_cur)

@@ -2,9 +2,17 @@
 
 Round 0: c/3 columns uniformly.  Rounds 1-2: c/3 columns each, sampled with
 probability proportional to the squared residual column norms
-||k_:j − C C† k_:j||² of the current sketch.  Needs K (or an operator whose
-columns/matmat are cheap) — hence Fig. 4's caveat that adaptive sampling gives
-up the fast model's time advantage but improves C itself.
+||k_:j − C C† k_:j||² of the current sketch.
+
+Each adaptive round costs ONE sweep of the panel engine: with Q an
+orthonormal basis of range(C) (an O(n·c²) SVD that touches no kernel
+entries), the residual norms decompose as
+
+    ||(I − Q Qᵀ) K e_j||² = ||K e_j||² − ||Qᵀ K e_j||²,
+
+so a single pass accumulating the per-column norms of K alongside Qᵀ K
+replaces PR 1's two passes per round (a streaming C† K matmat plus a
+residual-norm pass).  Pass a ``mesh`` to shard the sweep across devices.
 """
 from __future__ import annotations
 
@@ -12,30 +20,30 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.kernelop import as_operator
-from repro.core.leverage import pinv
+from repro.core.sweep import ProjResidualColNormPlan
 
 
-def _residual_column_norms(Kop, idx: jnp.ndarray,
-                           block_size=None) -> jnp.ndarray:
-    """||(I − C C†) K||² column norms, accumulated over row panels.
-
-    C† K = (K (C†)^T)^T by symmetry of K, so one streaming ``matmat`` plus one
-    ``map_row_panels`` pass computes the norms without materializing K.
-    """
-    C = Kop.columns(idx).astype(jnp.float32)
-    Cp = pinv(C)                                       # (c, n)
-    CpK = Kop.matmat(Cp.T, block_size=block_size).T    # (c, n) == C† K
-
-    def fn(panel, ridx, valid):
-        resid = panel.astype(jnp.float32) - jnp.take(C, ridx, axis=0) @ CpK
-        v = valid.astype(jnp.float32)[:, None]
-        return jnp.sum(resid * resid * v, axis=0)      # per-column partials
-
-    parts = Kop.map_row_panels(fn, block_size)         # (nblocks, n)
-    return jnp.sum(parts, axis=0)
+def _masked_orthonormal_basis(C: jnp.ndarray) -> jnp.ndarray:
+    """Left singular vectors of C with zero-σ columns zeroed out, so Q Qᵀ is
+    the orthogonal projector onto range(C) even when C is rank-deficient."""
+    C32 = C.astype(jnp.float32)
+    u, s, _ = jnp.linalg.svd(C32, full_matrices=False)
+    cutoff = max(C.shape) * jnp.finfo(jnp.float32).eps * jnp.max(s)
+    return u * (s > cutoff).astype(jnp.float32)[None, :]
 
 
-def uniform_adaptive2_indices(K, key: jax.Array, c: int) -> jnp.ndarray:
+def _residual_column_norms(Kop, idx: jnp.ndarray, block_size=None,
+                           mesh=None) -> jnp.ndarray:
+    """||(I − C C†) K||² column norms in one panel sweep."""
+    C = Kop.columns(idx)                       # n·c entries, not a sweep
+    Q = _masked_orthonormal_basis(C)
+    (norms,) = Kop.sweep([ProjResidualColNormPlan(Q)],
+                         block_size=block_size, mesh=mesh)
+    return norms
+
+
+def uniform_adaptive2_indices(K, key: jax.Array, c: int, block_size=None,
+                              mesh=None) -> jnp.ndarray:
     """Return c column indices via uniform + two adaptive rounds."""
     Kop = as_operator(K)
     n = Kop.n
@@ -47,7 +55,8 @@ def uniform_adaptive2_indices(K, key: jax.Array, c: int) -> jnp.ndarray:
     for kk, extra in ((k1, c1), (k2, c1)):
         if extra == 0:
             continue
-        norms = _residual_column_norms(Kop, idx)
+        norms = _residual_column_norms(Kop, idx, block_size=block_size,
+                                       mesh=mesh)
         p = norms / jnp.maximum(jnp.sum(norms), 1e-30)
         new = jax.random.choice(kk, n, shape=(extra,), replace=True, p=p)
         idx = jnp.concatenate([idx, new])

@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sketch as sk
-from repro.core.leverage import pinv, row_leverage_scores
+from repro.core import sweep as sweep_lib
+from repro.core.leverage import (column_leverage_scores_gram, pinv,
+                                 row_leverage_scores, row_leverage_scores_gram)
 
 
 class CURApprox(NamedTuple):
@@ -54,26 +56,23 @@ def fast_U_cur(ScC: jnp.ndarray, ScASr: jnp.ndarray, RSr: jnp.ndarray) -> jnp.nd
     return pinv(ScC) @ ScASr.astype(jnp.float32) @ pinv(RSr)
 
 
-def blocked_right_sketch(A: jnp.ndarray, S, block_size: int = 1024) -> jnp.ndarray:
-    """A S (m × s) streamed over row blocks of A.
+def blocked_right_sketch(A: jnp.ndarray, S, block_size: int = 1024,
+                         mesh=None) -> jnp.ndarray:
+    """A S (m × s) streamed over row panels of A via the sweep engine.
 
     The dense route ``S.left(A.T).T`` stages an n×m transposed copy (and, for
-    SRHT, a zero-padded one on top); streaming row blocks keeps the peak
-    footprint at O(b·n + m·s) — the CUR analogue of the SPSD panel protocol.
+    SRHT, a zero-padded one on top); sweeping row panels keeps the peak
+    footprint at O(b·n + m·s) — the CUR analogue of the SPSD panel protocol —
+    and a non-trivial ``mesh`` shards the panels across devices.
     """
     if isinstance(S, sk.GaussianSketch):
         return S.right(A)       # one GEMM; blocking would redraw S per block
-    m = A.shape[0]
-    bs = max(1, min(block_size, m))
-    nblocks = -(-m // bs)
-    starts = jnp.arange(nblocks) * bs
-
-    def body(start):
-        idx = jnp.clip(start + jnp.arange(bs), 0, m - 1)
-        return S.right(jnp.take(A, idx, axis=0))
-
-    out = jax.lax.map(body, starts)
-    return out.reshape(-1, out.shape[-1])[:m]
+    m, n = A.shape
+    (AS,) = sweep_lib.sweep_panels(
+        lambda idx: jnp.take(A, idx, axis=0), m, n,
+        [sweep_lib.SketchRightPlan(S, S.s)],
+        block_size=block_size, mesh=mesh)
+    return AS
 
 
 def fast_cur(
@@ -88,13 +87,17 @@ def fast_cur(
     scale: bool = False,
     streaming: bool = False,
     block_size: int = 1024,
+    mesh=None,
 ) -> CURApprox:
     """End-to-end fast CUR: uniform C/R, then the sketched Ũ (Thm 9 setup).
 
     Column-selection sketches observe only an (sc × sr) block of A plus C and R.
     Leverage sampling uses row scores of C (for S_C) and of R^T (for S_R).
-    With ``streaming=True`` the projection-sketch branch forms S_C^T A S_R via
-    ``blocked_right_sketch`` instead of transposed full-size temporaries.
+    With ``streaming=True`` everything routes through the sweep engine:
+    S_C^T A S_R via ``blocked_right_sketch`` (no transposed full-size
+    temporaries), and the R-side leverage scores via the blocked Gram R Rᵀ
+    pass (``column_leverage_scores_gram``) instead of densifying the n×r
+    transpose — the path that survives n ≫ 10⁵.  ``mesh`` shards the sweeps.
     """
     m, n = A.shape
     kcr, kc, kr = jax.random.split(key, 3)
@@ -102,8 +105,14 @@ def fast_cur(
 
     if sketch_kind in ("uniform", "leverage"):
         if sketch_kind == "leverage":
-            Sc = sk.leverage_column_sketch(kc, row_leverage_scores(C), sc, scale=scale)
-            Sr = sk.leverage_column_sketch(kr, row_leverage_scores(R.T), sr, scale=scale)
+            if streaming:
+                lev_c = row_leverage_scores_gram(C, block_size, mesh=mesh)
+                lev_r = column_leverage_scores_gram(R, block_size, mesh=mesh)
+            else:
+                lev_c = row_leverage_scores(C)
+                lev_r = row_leverage_scores(R.T)
+            Sc = sk.leverage_column_sketch(kc, lev_c, sc, scale=scale)
+            Sr = sk.leverage_column_sketch(kr, lev_r, sr, scale=scale)
         else:
             Sc = sk.uniform_column_sketch(kc, m, sc, scale=scale)
             Sr = sk.uniform_column_sketch(kr, n, sr, scale=scale)
@@ -121,7 +130,7 @@ def fast_cur(
         ScC = Sc.left(C)
         RSr = Sr.left(R.T).T
         if streaming:
-            ScASr = Sc.left(blocked_right_sketch(A, Sr, block_size))
+            ScASr = Sc.left(blocked_right_sketch(A, Sr, block_size, mesh=mesh))
         else:
             ScASr = Sc.left(Sr.left(A.T).T)
 

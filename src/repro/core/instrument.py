@@ -1,0 +1,98 @@
+"""Instrumented operator wrappers — the paper's Table-3 "#Entries" meter.
+
+``CountingOperator`` wraps any ``SPSDOperator`` and records how many kernel
+entries each pipeline actually *evaluates*, which is the quantity the
+paper's efficiency claims are about.  Counters are plain Python ints bumped
+at call/trace time (every public entry point in this repo invokes the
+operator protocol from Python, so one ``sweep`` call == one pass over the
+panels regardless of how ``jax.lax.scan`` re-executes the traced body):
+
+- ``sweeps``  : panel-engine passes (each evaluates every row panel once)
+- ``panels``  : total row panels materialized across those sweeps
+- ``entries`` : kernel entries evaluated (sweeps count nblocks·b·n incl.
+                clamp padding; direct block/columns/diag calls count their
+                exact extent)
+- ``blocks`` / ``columns`` / ``diags`` / ``fulls`` : direct-access calls
+
+Used by the parity/entry-count tests (fast_model + streaming error must stay
+≤ 2 sweeps; the fused ``fast_model_with_error`` at exactly 1) and by
+``benchmarks/bench_time.py --streaming`` to print measured entry counts
+alongside wall time.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from repro.core import sweep as sweep_lib
+from repro.core.kernelop import SPSDOperator
+
+
+class CountingOperator(SPSDOperator):
+    """Transparent counting proxy around an ``SPSDOperator``."""
+
+    def __init__(self, inner: SPSDOperator):
+        self.inner = inner
+        self.reset()
+
+    def reset(self):
+        self.counts = {"sweeps": 0, "panels": 0, "entries": 0,
+                       "blocks": 0, "columns": 0, "diags": 0, "fulls": 0}
+        self._in_sweep = False
+
+    @property
+    def n(self) -> int:
+        return self.inner.n
+
+    # -- direct access (counted exactly) ------------------------------------
+
+    def block(self, row_idx, col_idx):
+        if not self._in_sweep:
+            self.counts["blocks"] += 1
+            self.counts["entries"] += int(row_idx.shape[0]) * int(col_idx.shape[0])
+        return self.inner.block(row_idx, col_idx)
+
+    def columns(self, idx):
+        self.counts["columns"] += 1
+        self.counts["entries"] += self.n * int(idx.shape[0])
+        return self.inner.columns(idx)
+
+    def diag(self):
+        self.counts["diags"] += 1
+        self.counts["entries"] += self.n
+        return self.inner.diag()
+
+    def full(self):
+        self.counts["fulls"] += 1
+        self.counts["entries"] += self.n * self.n
+        return self.inner.full()
+
+    # -- streaming protocol (counted per pass) ------------------------------
+
+    def _count_sweep(self, block_size, mesh=None):
+        dp = sweep_lib.mesh_data_size(mesh)
+        bs = sweep_lib.resolved_block_size(self.n, self.n, block_size, dp)
+        nblocks = -(-self.n // bs)
+        if dp > 1:
+            nblocks += (-nblocks) % dp       # sentinel padding panels
+        self.counts["sweeps"] += 1
+        self.counts["panels"] += nblocks
+        self.counts["entries"] += nblocks * bs * self.n
+
+    def sweep(self, plans: Sequence, block_size: Optional[int] = None,
+              mesh=None):
+        self._count_sweep(block_size, mesh)
+        self._in_sweep = True
+        try:
+            # delegate to the inner op so its fast paths (e.g. the fused
+            # Pallas multi-RHS launch) stay engaged under instrumentation
+            return self.inner.sweep(plans, block_size=block_size, mesh=mesh)
+        finally:
+            self._in_sweep = False
+
+    def map_row_panels(self, fn, block_size: Optional[int] = None):
+        self._count_sweep(block_size)
+        self._in_sweep = True
+        try:
+            return self.inner.map_row_panels(fn, block_size)
+        finally:
+            self._in_sweep = False

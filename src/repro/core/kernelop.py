@@ -11,6 +11,10 @@ the access patterns the fast model needs:
 
 plus the *streaming* protocol every large-n code path is built on:
 
+- ``sweep(plans)``        -> the single-pass multi-product panel engine
+  (``repro.core.sweep``): every plan consumes each (b × n) row panel from ONE
+  materialization, and a non-trivial ``mesh`` partitions the panels over the
+  data axis with ``shard_map`` (psum-reduced partial products).
 - ``map_row_panels(fn)``  -> fn applied to (b × n) row panels, ``jax.lax.map``
   over row blocks; peak memory O(b·n), never O(n²).
 - ``matmat(V)``           -> K @ V streamed through row panels.
@@ -18,25 +22,23 @@ plus the *streaming* protocol every large-n code path is built on:
 
 ``RBFKernel`` computes entries on the fly from the d-dimensional data; on TPU
 both the block computation and the streaming matmat are backed by the fused
-Pallas kernels in ``repro.kernels.rbf_sketch`` (see ``use_pallas``).
+Pallas kernels in ``repro.kernels.rbf_sketch`` (see ``use_pallas``), and
+matmul-shaped sweeps collapse into one multi-right-hand-side Pallas launch
+whose kernel tiles never leave VMEM.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-# Row panels are capped at roughly this many f32 elements (b·n), so the
-# streaming paths stay ~128 MB regardless of n.
-_PANEL_ELEMENT_BUDGET = 1 << 25
+from repro.core import sweep as sweep_lib
 
-
-def _panel_block_size(n: int, block_size: Optional[int]) -> int:
-    if block_size is not None:
-        return max(1, int(block_size))
-    return max(128, min(4096, _PANEL_ELEMENT_BUDGET // max(n, 1)))
+# Back-compat aliases; the canonical definitions live in repro.core.sweep.
+_PANEL_ELEMENT_BUDGET = sweep_lib.PANEL_ELEMENT_BUDGET
+_panel_block_size = sweep_lib.panel_block_size
 
 
 class SPSDOperator:
@@ -58,6 +60,22 @@ class SPSDOperator:
 
     # -- streaming protocol -------------------------------------------------
 
+    def sweep(self, plans: Sequence, block_size: Optional[int] = None,
+              mesh=None):
+        """Run the multi-product panel engine over this operator's rows.
+
+        Each kernel row panel is materialized exactly once and fed to every
+        plan (``repro.core.sweep``), so a whole bundle of products — K @ S,
+        column gathers for C, Hutchinson probes, residual norms — costs one
+        evaluation of each kernel tile.  A non-trivial ``mesh`` shards the
+        panels over its data axes via ``shard_map`` (single-device meshes and
+        ``mesh=None`` fall back to the sequential scan).
+        """
+        cols = jnp.arange(self.n)
+        return sweep_lib.sweep_panels(
+            lambda idx: self.block(idx, cols), self.n, self.n, plans,
+            block_size=block_size, mesh=mesh)
+
     def map_row_panels(self, fn, block_size: Optional[int] = None):
         """Apply ``fn(panel, row_idx, valid)`` to consecutive (b × n) row panels.
 
@@ -67,7 +85,7 @@ class SPSDOperator:
         Runs under ``jax.lax.map`` so only one panel is live at a time.
         """
         n = self.n
-        bs = _panel_block_size(n, block_size)
+        bs = sweep_lib.resolved_block_size(n, n, block_size)
         nblocks = -(-n // bs)
         starts = jnp.arange(nblocks) * bs
         cols = jnp.arange(n)
@@ -80,21 +98,20 @@ class SPSDOperator:
 
         return jax.lax.map(body, starts)
 
-    def matmat(self, V: jnp.ndarray, block_size: Optional[int] = None) -> jnp.ndarray:
+    def matmat(self, V: jnp.ndarray, block_size: Optional[int] = None,
+               mesh=None) -> jnp.ndarray:
         """K @ V without materializing K (footnote-2 memory trick)."""
         V2 = V if V.ndim == 2 else V[:, None]
-        out = self.map_row_panels(lambda panel, idx, valid: panel @ V2,
-                                  block_size)
-        out = out.reshape(-1, V2.shape[1])[: self.n]
+        (out,) = self.sweep([sweep_lib.MatmulPlan(V2)],
+                            block_size=block_size, mesh=mesh)
         return out if V.ndim == 2 else out[:, 0]
 
-    def frobenius_norm_sq(self, block_size: Optional[int] = None) -> jnp.ndarray:
+    def frobenius_norm_sq(self, block_size: Optional[int] = None,
+                          mesh=None) -> jnp.ndarray:
         """||K||_F² accumulated over row panels (never forms K)."""
-        def fn(panel, idx, valid):
-            p32 = panel.astype(jnp.float32)
-            return jnp.sum(p32 * p32 * valid.astype(jnp.float32)[:, None])
-
-        return jnp.sum(self.map_row_panels(fn, block_size))
+        (out,) = self.sweep([sweep_lib.FrobeniusPlan()],
+                            block_size=block_size, mesh=mesh)
+        return out
 
 
 @jax.tree_util.register_pytree_node_class
@@ -125,10 +142,10 @@ class DenseSPSD(SPSDOperator):
     def diag(self):
         return jnp.diagonal(self.K)
 
-    def matmat(self, V, block_size: Optional[int] = None):
+    def matmat(self, V, block_size: Optional[int] = None, mesh=None):
         return self.K @ V
 
-    def frobenius_norm_sq(self, block_size: Optional[int] = None):
+    def frobenius_norm_sq(self, block_size: Optional[int] = None, mesh=None):
         K32 = self.K.astype(jnp.float32)
         return jnp.sum(K32 * K32)
 
@@ -178,11 +195,36 @@ class RBFKernel(SPSDOperator):
     def diag(self):
         return jnp.ones((self.n,), self.X.dtype)
 
-    def matmat(self, V, block_size: Optional[int] = None):
-        if self.use_pallas:
+    def matmat(self, V, block_size: Optional[int] = None, mesh=None):
+        if self.use_pallas and sweep_lib.mesh_data_size(mesh) <= 1:
             from repro.kernels.rbf_sketch import ops as rbf_ops
             return rbf_ops.rbf_matmat(self.X, V, self.sigma)
-        return SPSDOperator.matmat(self, V, block_size)
+        return SPSDOperator.matmat(self, V, block_size, mesh=mesh)
+
+    def sweep(self, plans: Sequence, block_size: Optional[int] = None,
+              mesh=None):
+        """Matmul-shaped sweeps fuse into ONE multi-RHS Pallas launch.
+
+        When every plan is a matmat or a column gather (the fast-model
+        bundle: C = K P plus K @ S plus probes), the whole sweep lowers to a
+        single ``rbf_matmat_multi`` call whose kernel tiles are computed once
+        in VMEM and contracted against all right-hand sides before being
+        discarded — no kernel entry is ever evaluated twice or staged in HBM.
+        Column gathers ride along as one-hot right-hand sides (exact: each
+        output entry is one K entry times 1.0).
+        """
+        if self.use_pallas and sweep_lib.mesh_data_size(mesh) <= 1 and plans \
+                and all(isinstance(p, (sweep_lib.MatmulPlan,
+                                       sweep_lib.ColumnGatherPlan))
+                        for p in plans):
+            from repro.kernels.rbf_sketch import ops as rbf_ops
+            n = self.n
+            Vs = [p.V.astype(jnp.float32) if isinstance(p, sweep_lib.MatmulPlan)
+                  else jax.nn.one_hot(p.col_idx, n, dtype=jnp.float32).T
+                  for p in plans]
+            return list(rbf_ops.rbf_matmat_multi(self.X, tuple(Vs),
+                                                 self.sigma))
+        return SPSDOperator.sweep(self, plans, block_size, mesh=mesh)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -215,10 +257,10 @@ class LinearKernel(SPSDOperator):
     def diag(self):
         return jnp.sum(self.X * self.X, axis=1)
 
-    def matmat(self, V, block_size: Optional[int] = None):
+    def matmat(self, V, block_size: Optional[int] = None, mesh=None):
         return self.X @ (self.X.T @ V)
 
-    def frobenius_norm_sq(self, block_size: Optional[int] = None):
+    def frobenius_norm_sq(self, block_size: Optional[int] = None, mesh=None):
         # ||X X^T||_F² = ||X^T X||_F² — a d×d Gram, O(nd²) and O(d²) memory.
         G = self.X.astype(jnp.float32)
         G = G.T @ G

@@ -62,10 +62,23 @@ class ColumnSketch:
 
 
 def uniform_column_sketch(key: jax.Array, n: int, s: int,
-                          scale: bool = True) -> ColumnSketch:
-    """Uniform sampling without replacement (p_i = 1/n)."""
-    idx = jax.random.choice(key, n, shape=(s,), replace=False)
-    sc = jnp.full((s,), jnp.sqrt(n / s) if scale else 1.0, dtype=jnp.float32)
+                          scale: bool = True,
+                          mask: Optional[jnp.ndarray] = None) -> ColumnSketch:
+    """Uniform sampling without replacement (p_i = 1/n).
+
+    ``mask`` (n,) restricts sampling to valid rows of a padded operator
+    (p_i = 1/n_valid on the mask, 0 elsewhere) — see ``MaskedSketch``.
+    """
+    if mask is None:
+        idx = jax.random.choice(key, n, shape=(s,), replace=False)
+        sc = jnp.full((s,), jnp.sqrt(n / s) if scale else 1.0,
+                      dtype=jnp.float32)
+    else:
+        m = mask.astype(jnp.float32)
+        idx = jax.random.choice(key, n, shape=(s,), replace=False,
+                                p=m / jnp.sum(m))
+        one = jnp.sqrt(jnp.sum(m) / s) if scale else jnp.float32(1.0)
+        sc = jnp.full((s,), 1.0, jnp.float32) * one
     return ColumnSketch(idx, sc, n)
 
 
@@ -253,31 +266,89 @@ def count_sketch(key: jax.Array, n: int, s: int) -> CountSketch:
 
 
 # ---------------------------------------------------------------------------
+# Row masking (ragged / padded batches)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MaskedSketch:
+    """diag(mask) · S — a sketch restricted to the valid rows of a padded op.
+
+    Stacking ragged kernels (different n per item) to a common shape leaves
+    junk padding rows in K; masking the sketch rows makes every product
+    identical to the unpadded one: Sᵀ M K M S only ever touches valid
+    entries, so Sᵀ K S is unbiased by construction.
+    """
+
+    base: object
+    mask: jnp.ndarray           # (n,) 1.0 on valid rows, 0.0 on padding
+
+    def tree_flatten(self):
+        return (self.base, self.mask), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    @property
+    def s(self) -> int:
+        return self.base.s
+
+    def left(self, A: jnp.ndarray) -> jnp.ndarray:      # Sᵀ M A
+        m = self.mask.astype(A.dtype)
+        return self.base.left(A * m.reshape((-1,) + (1,) * (A.ndim - 1)))
+
+    def right(self, A: jnp.ndarray) -> jnp.ndarray:     # A M S (A: (b, n))
+        m = self.mask.astype(A.dtype)
+        return self.base.right(A * m[None, :])
+
+    def sym(self, K: jnp.ndarray) -> jnp.ndarray:       # Sᵀ M K M S
+        m = self.mask.astype(K.dtype)
+        return self.base.sym(K * (m[:, None] * m[None, :]))
+
+
+# ---------------------------------------------------------------------------
 # Streaming application against implicit operators (Fig. 1 at scale)
 # ---------------------------------------------------------------------------
 
-def right_streaming(S, Kop, block_size: Optional[int] = None) -> jnp.ndarray:
+def plan_for_sketch(S):
+    """K S as a panel plan for the sweep engine (``SPSDOperator.sweep``).
+
+    Gaussian sketches materialize their n×s matrix once — the same O(n·s)
+    budget as the output — so the panel loop never redraws it; every other
+    family applies ``S.right`` to each panel.
+    """
+    from repro.core import sweep as sweep_lib
+    base, mask = (S.base, S.mask) if isinstance(S, MaskedSketch) else (S, None)
+    if isinstance(base, GaussianSketch):
+        M = base._mat()
+        if mask is not None:
+            M = M * mask.astype(M.dtype)[:, None]
+        return sweep_lib.MatmulPlan(M)
+    return sweep_lib.SketchRightPlan(S, S.s)
+
+
+def right_streaming(S, Kop, block_size: Optional[int] = None,
+                    mesh=None) -> jnp.ndarray:
     """K S (n × s) through blocked row panels of an ``SPSDOperator``.
 
-    Each (b × n) panel K[idx, :] is sketched on the fly — ``(K S)[idx] =
-    (S^T K[idx, :]^T)^T`` — so peak memory is O(b·n + n·s); the n×n kernel is
-    never materialized.  Works for every sketch family (projection sketches
-    included) because only ``S.right`` on a panel is required.
+    One sweep of the panel engine; peak memory is O(b·n + n·s) and the n×n
+    kernel is never materialized.  Pass a ``mesh`` to shard the panels over
+    its data axis.
     """
-    if isinstance(S, GaussianSketch):
-        # S.right inside the panel loop would redraw the n×s Gaussian per
-        # panel; the explicit matrix is O(n·s) — same budget as the output —
-        # so draw it once and stream only K.
-        return Kop.matmat(S._mat(), block_size=block_size)
-    out = Kop.map_row_panels(lambda panel, idx, valid: S.right(panel),
-                             block_size)
-    return out.reshape(-1, out.shape[-1])[: Kop.n]
+    (KS,) = Kop.sweep([plan_for_sketch(S)], block_size=block_size, mesh=mesh)
+    return KS
 
 
-def sym_streaming(S, Kop, block_size: Optional[int] = None) -> jnp.ndarray:
+def sym_streaming(S, Kop, block_size: Optional[int] = None,
+                  mesh=None) -> jnp.ndarray:
     """S^T K S (s × s) via blocked K @ S then one ``S.left`` — streaming
     counterpart of ``S.sym(K_dense)`` for implicit operators."""
-    KS = right_streaming(S, Kop, block_size)
+    KS = right_streaming(S, Kop, block_size, mesh=mesh)
     return S.left(KS)
 
 

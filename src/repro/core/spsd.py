@@ -10,20 +10,25 @@ differ only in U (Table 1):
 ``fast_spsd`` is Algorithm 1 end-to-end (with the §4.5 tricks: P ⊂ S and
 unscaled leverage sampling by default).
 
-Every large-n path streams through the blockwise operator protocol
-(``SPSDOperator.map_row_panels`` / ``matmat``): projection sketches, the
-prototype U, and the error metrics all run at n ≫ 10⁴ without ever
-allocating an n×n array.  ``fast_model_batched`` vmaps Algorithm 1 over a
-stacked batch of same-shape kernels.
+Every large-n path streams through the single-sweep panel engine
+(``SPSDOperator.sweep`` / ``matmat``): ``fast_model`` gathers C = K P and
+applies the projection sketch from ONE pass over the kernel row panels, and
+``fast_model_with_error`` folds the Hutchinson error probes into the same
+pass — model + error for one evaluation of each kernel entry, the Table-3
+"#Entries" economy at its floor.  Pass ``mesh=`` (a Mesh with a ``data``
+axis, see ``distributed/sharding.py``) to shard every sweep across devices.
+``fast_model_batched`` vmaps Algorithm 1 over a stacked batch of kernels;
+ragged batches are handled by ``n_valid`` padding masks.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import sketch as sk
+from repro.core import sweep as sweep_lib
 from repro.core.kernelop import DenseSPSD, SPSDOperator, as_operator
 from repro.core.leverage import pinv, row_leverage_scores
 
@@ -49,16 +54,17 @@ class SPSDApprox(NamedTuple):
 # U matrices
 # ---------------------------------------------------------------------------
 
-def prototype_U(K, C: jnp.ndarray,
-                block_size: Optional[int] = None) -> jnp.ndarray:
+def prototype_U(K, C: jnp.ndarray, block_size: Optional[int] = None,
+                mesh=None) -> jnp.ndarray:
     """U* = argmin_U ||K - C U C^T||_F = C† K (C†)^T  (Eq. 4).
 
     K may be dense or any ``SPSDOperator``; K (C†)^T is streamed through
-    ``matmat`` so implicit kernels are never densified.
+    ``matmat`` (one panel sweep, shardable via ``mesh``) so implicit kernels
+    are never densified.
     """
     Kop = as_operator(K)
     Cp = pinv(C)                                          # (c, n) f32
-    KCpT = Kop.matmat(Cp.T, block_size=block_size)        # (n, c)
+    KCpT = Kop.matmat(Cp.T, block_size=block_size, mesh=mesh)  # (n, c)
     return Cp @ KCpT.astype(Cp.dtype)
 
 
@@ -103,6 +109,26 @@ def nystrom_model(K, key: jax.Array, c: int) -> SPSDApprox:
     return SPSDApprox(C=C, U=nystrom_U(W), P_indices=idx)
 
 
+def _column_sketch_for_C(Kop: SPSDOperator, C: jnp.ndarray, key: jax.Array,
+                         s: int, s_sketch: str, P_indices, enforce_subset: bool,
+                         scale: bool, mask: Optional[jnp.ndarray]):
+    """The uniform/leverage S plus its S^T K S block (s² entries, no sweep)."""
+    n = Kop.n
+    if s_sketch == "leverage":
+        # padding rows of a masked C are exactly zero -> leverage 0 -> never
+        # sampled, so no extra masking is needed here.
+        lev = row_leverage_scores(C)
+        S = sk.leverage_column_sketch(key, lev, s, scale=scale)
+    else:
+        S = sk.uniform_column_sketch(key, n, s, scale=scale, mask=mask)
+    if enforce_subset and P_indices is not None:
+        S = sk.subset_union_sketch(S, P_indices, n)         # Corollary 5
+    StC = S.left(C)
+    blk = Kop.block(S.indices, S.indices)
+    StKS = blk * (S.scales[:, None] * S.scales[None, :])
+    return S, StC, StKS
+
+
 def fast_model_from_C(
     K,
     C: jnp.ndarray,
@@ -114,42 +140,50 @@ def fast_model_from_C(
     scale: bool = False,
     streaming: Optional[bool] = None,
     block_size: Optional[int] = None,
+    mesh=None,
+    n_valid=None,
 ) -> SPSDApprox:
     """Algorithm 1 given a fixed C (any provenance).
 
     ``s_sketch`` ∈ {uniform, leverage, gaussian, srht, countsketch}.
     Column-selection sketches read only an s×s block of K (Fig. 1).
-    Projection sketches form S^T K S through blocked K @ S
-    (``sketch.sym_streaming``) unless ``streaming=False`` forces the dense
-    route; default is streaming for every implicit operator, dense only for
-    an already-materialized ``DenseSPSD``.
+    Projection sketches form S^T K S through one panel sweep
+    (``sketch.sym_streaming``, shardable via ``mesh``) unless
+    ``streaming=False`` forces the dense route; default is streaming for
+    every implicit operator, dense only for an already-materialized
+    ``DenseSPSD``.  ``n_valid`` marks the true size of a padded operator
+    (rows ≥ n_valid are masked out of every product).
     """
     Kop = as_operator(K)
     n = Kop.n
+    mask = None if n_valid is None else \
+        (jnp.arange(n) < n_valid).astype(jnp.float32)
 
     if s_sketch in ("uniform", "leverage"):
-        if s_sketch == "leverage":
-            lev = row_leverage_scores(C)
-            S = sk.leverage_column_sketch(key, lev, s, scale=scale)
-        else:
-            S = sk.uniform_column_sketch(key, n, s, scale=scale)
-        if enforce_subset and P_indices is not None:
-            S = sk.subset_union_sketch(S, P_indices, n)     # Corollary 5
-        StC = S.left(C)
-        blk = Kop.block(S.indices, S.indices)
-        StKS = blk * (S.scales[:, None] * S.scales[None, :])
+        _, StC, StKS = _column_sketch_for_C(
+            Kop, C, key, s, s_sketch, P_indices, enforce_subset, scale, mask)
     else:
         S = sk.make_sketch(s_sketch, key, n, s)
+        if mask is not None:
+            S = sk.MaskedSketch(S, mask)
         StC = S.left(C)
         if streaming is None:
             streaming = not isinstance(Kop, DenseSPSD)
         if streaming:
-            StKS = sk.sym_streaming(S, Kop, block_size=block_size)
+            StKS = sk.sym_streaming(S, Kop, block_size=block_size, mesh=mesh)
         else:
             StKS = S.sym(Kop.full())
 
     U = fast_U(StC, StKS)
     return SPSDApprox(C=C, U=U, P_indices=P_indices)
+
+
+def _sample_P_indices(key: jax.Array, n: int, c: int,
+                      mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if mask is None:
+        return jax.random.choice(key, n, shape=(c,), replace=False)
+    return jax.random.choice(key, n, shape=(c,), replace=False,
+                             p=mask / jnp.sum(mask))
 
 
 def fast_model(
@@ -162,16 +196,97 @@ def fast_model(
     scale: bool = False,
     streaming: Optional[bool] = None,
     block_size: Optional[int] = None,
+    mesh=None,
+    n_valid=None,
 ) -> SPSDApprox:
-    """Algorithm 1 end-to-end: uniform C = KP, then the fast U."""
+    """Algorithm 1 end-to-end: uniform C = KP, then the fast U.
+
+    With a projection ``s_sketch`` on a streaming operator, the C gather and
+    the K @ S product ride the SAME panel sweep — every kernel row panel is
+    evaluated exactly once for the whole model (PR-1 paid one extra n×c
+    evaluation plus a separate sweep).  ``mesh`` shards that sweep;
+    ``n_valid`` handles padded (ragged-batch) operators.
+    """
     Kop = as_operator(K)
+    n = Kop.n
     kc, ks = jax.random.split(key)
-    base = sample_C(Kop, kc, c)
-    return fast_model_from_C(
-        Kop, base.C, ks, s,
-        P_indices=base.P_indices, s_sketch=s_sketch,
-        enforce_subset=enforce_subset, scale=scale,
-        streaming=streaming, block_size=block_size)
+    mask = None if n_valid is None else \
+        (jnp.arange(n) < n_valid).astype(jnp.float32)
+    idx = _sample_P_indices(kc, n, c, mask)
+
+    if streaming is None:
+        streaming = not isinstance(Kop, DenseSPSD)
+    if s_sketch in ("uniform", "leverage") or not streaming:
+        C = Kop.columns(idx)
+        if mask is not None:
+            C = C * mask[:, None]
+        return fast_model_from_C(
+            Kop, C, ks, s,
+            P_indices=idx, s_sketch=s_sketch,
+            enforce_subset=enforce_subset, scale=scale,
+            streaming=streaming, block_size=block_size, mesh=mesh,
+            n_valid=n_valid)
+
+    # fused path: C = K P and K S from ONE sweep over the row panels
+    S = sk.make_sketch(s_sketch, ks, n, s)
+    if mask is not None:
+        S = sk.MaskedSketch(S, mask)
+    C, KS = Kop.sweep(
+        [sweep_lib.ColumnGatherPlan(idx), sk.plan_for_sketch(S)],
+        block_size=block_size, mesh=mesh)
+    if mask is not None:
+        C = C * mask[:, None]
+    U = fast_U(S.left(C), S.left(KS))
+    return SPSDApprox(C=C, U=U, P_indices=idx)
+
+
+def fast_model_with_error(
+    K,
+    key: jax.Array,
+    c: int,
+    s: int,
+    s_sketch: str = "gaussian",
+    probes: int = 64,
+    enforce_subset: bool = True,
+    scale: bool = False,
+    block_size: Optional[int] = None,
+    mesh=None,
+    error_key: Optional[jax.Array] = None,
+) -> Tuple[SPSDApprox, jnp.ndarray]:
+    """Algorithm 1 + its Hutchinson relative error in ONE panel sweep.
+
+    The error probes Z are independent of the model, so K @ Z joins the same
+    sweep that gathers C and applies the projection sketch: the whole
+    model-plus-evaluation pipeline reads each kernel row panel exactly once
+    (PR 1 used one sweep for the model and another for the error — plus two
+    more per adaptive round).  Returns ``(approx, relative_error)`` with the
+    same estimator as ``relative_error(method="hutchinson")``.
+    """
+    Kop = as_operator(K)
+    n = Kop.n
+    kc, ks = jax.random.split(key)
+    kz = jax.random.fold_in(key, 777) if error_key is None else error_key
+    idx = _sample_P_indices(kc, n, c, None)
+    Z = jax.random.rademacher(kz, (n, probes), dtype=jnp.float32)
+
+    if s_sketch in ("uniform", "leverage"):
+        C, KZ = Kop.sweep(
+            [sweep_lib.ColumnGatherPlan(idx), sweep_lib.MatmulPlan(Z)],
+            block_size=block_size, mesh=mesh)
+        _, StC, StKS = _column_sketch_for_C(
+            Kop, C, ks, s, s_sketch, idx, enforce_subset, scale, None)
+    else:
+        S = sk.make_sketch(s_sketch, ks, n, s)
+        C, KS, KZ = Kop.sweep(
+            [sweep_lib.ColumnGatherPlan(idx), sk.plan_for_sketch(S),
+             sweep_lib.MatmulPlan(Z)],
+            block_size=block_size, mesh=mesh)
+        StC, StKS = S.left(C), S.left(KS)
+
+    approx = SPSDApprox(C=C, U=fast_U(StC, StKS), P_indices=idx)
+    RZ = KZ.astype(jnp.float32) - approx.matmat(Z).astype(jnp.float32)
+    err = jnp.sum(RZ * RZ) / jnp.sum(KZ * KZ)
+    return approx, err
 
 
 def fast_model_batched(
@@ -184,6 +299,7 @@ def fast_model_batched(
     scale: bool = False,
     streaming: Optional[bool] = None,
     block_size: Optional[int] = None,
+    n_valid: Optional[jnp.ndarray] = None,
 ) -> SPSDApprox:
     """Algorithm 1 vmapped over a batch of kernels.
 
@@ -194,16 +310,25 @@ def fast_model_batched(
     are stacked along the batch axis.  Whole-batch work runs in one XLA
     computation, so many moderate kernels (hyperparameter sweeps, per-class
     Gram matrices) amortize compilation and saturate the accelerator.
+
+    Ragged batches: zero-pad each kernel's data to a common n and pass
+    ``n_valid`` of shape (B,) with the true sizes.  Sampling is restricted to
+    valid rows, C's padding rows are zeroed, and projection sketches are
+    row-masked (``sketch.MaskedSketch``), so Sᵀ K S never observes a padding
+    entry and the per-item results match unpadded runs.
     """
     if not isinstance(Ks, SPSDOperator):
         Ks = DenseSPSD(jnp.asarray(Ks))
 
-    def one(op, key):
+    def one(op, key, nv):
         return fast_model(op, key, c=c, s=s, s_sketch=s_sketch,
                           enforce_subset=enforce_subset, scale=scale,
-                          streaming=streaming, block_size=block_size)
+                          streaming=streaming, block_size=block_size,
+                          n_valid=nv)
 
-    return jax.vmap(one)(Ks, keys)
+    if n_valid is None:
+        return jax.vmap(lambda op, key: one(op, key, None))(Ks, keys)
+    return jax.vmap(one)(Ks, keys, jnp.asarray(n_valid))
 
 
 # ---------------------------------------------------------------------------
@@ -229,35 +354,35 @@ def _resolve_error_method(Kop: SPSDOperator, method: str) -> str:
 
 
 def _blocked_residual_fro2(Kop: SPSDOperator, approx: SPSDApprox,
-                           block_size: Optional[int]):
-    """(||K - CUC^T||_F², ||K||_F²) in one streaming pass."""
+                           block_size: Optional[int], mesh=None):
+    """(||K - CUC^T||_F², ||K||_F²) in one panel sweep."""
     C32 = approx.C.astype(jnp.float32)
     M = approx.U.astype(jnp.float32) @ C32.T              # (c, n)
-
-    def fn(panel, idx, valid):
-        p32 = panel.astype(jnp.float32)
-        resid = p32 - jnp.take(C32, idx, axis=0) @ M
-        v = valid.astype(jnp.float32)[:, None]
-        return (jnp.sum(resid * resid * v), jnp.sum(p32 * p32 * v))
-
-    num_parts, den_parts = Kop.map_row_panels(fn, block_size)
-    return jnp.sum(num_parts), jnp.sum(den_parts)
+    ((num, den),) = Kop.sweep([sweep_lib.ResidualFroPlan(C32, M)],
+                              block_size=block_size, mesh=mesh)
+    return num, den
 
 
 def _hutchinson_residual_fro2(Kop: SPSDOperator, approx: SPSDApprox,
                               probes: int, key: jax.Array,
-                              block_size: Optional[int]):
+                              block_size: Optional[int], mesh=None):
     """Rademacher estimates of (||K - CUC^T||_F², ||K||_F²)."""
     Z = jax.random.rademacher(key, (Kop.n, probes), dtype=jnp.float32)
-    KZ = Kop.matmat(Z, block_size=block_size).astype(jnp.float32)
+    KZ = Kop.matmat(Z, block_size=block_size, mesh=mesh).astype(jnp.float32)
     RZ = KZ - approx.matmat(Z).astype(jnp.float32)
     return jnp.sum(RZ * RZ) / probes, jnp.sum(KZ * KZ) / probes
 
 
 def relative_error(K, approx: SPSDApprox, method: str = "auto",
                    block_size: Optional[int] = None, probes: int = 64,
-                   key: Optional[jax.Array] = None) -> jnp.ndarray:
-    """||K - C U C^T||_F² / ||K||_F²  (Fig. 3/4 y-axis)."""
+                   key: Optional[jax.Array] = None, mesh=None) -> jnp.ndarray:
+    """||K - C U C^T||_F² / ||K||_F²  (Fig. 3/4 y-axis).
+
+    The streaming methods cost exactly ONE sweep over the kernel row panels
+    (shardable via ``mesh``); together with the fused ``fast_model`` that
+    bounds model + error at two evaluations of each kernel entry — or one,
+    via ``fast_model_with_error``.
+    """
     Kop = as_operator(K)
     method = _resolve_error_method(Kop, method)
     if method == "dense":
@@ -265,19 +390,20 @@ def relative_error(K, approx: SPSDApprox, method: str = "auto",
         R = Kd - approx.dense().astype(jnp.float32)
         return jnp.sum(R * R) / jnp.sum(Kd * Kd)
     if method == "blocked":
-        num, den = _blocked_residual_fro2(Kop, approx, block_size)
+        num, den = _blocked_residual_fro2(Kop, approx, block_size, mesh)
         return num / den
     if method == "hutchinson":
         key = jax.random.PRNGKey(0) if key is None else key
         num, den = _hutchinson_residual_fro2(Kop, approx, probes, key,
-                                             block_size)
+                                             block_size, mesh)
         return num / den
     raise ValueError(f"unknown error method {method!r}")
 
 
 def streaming_topk_eigvals(K, k: int, key: Optional[jax.Array] = None,
                            oversample: int = 8, power_iters: int = 2,
-                           block_size: Optional[int] = None) -> jnp.ndarray:
+                           block_size: Optional[int] = None,
+                           mesh=None) -> jnp.ndarray:
     """Top-k eigenvalues of an SPSD operator via randomized subspace iteration.
 
     Halko-Martinsson-Tropp: Y = K Ω, a few power passes, then the Rayleigh
@@ -288,12 +414,12 @@ def streaming_topk_eigvals(K, k: int, key: Optional[jax.Array] = None,
     key = jax.random.PRNGKey(0) if key is None else key
     q = min(Kop.n, k + oversample)
     Y = Kop.matmat(jax.random.normal(key, (Kop.n, q), dtype=jnp.float32),
-                   block_size=block_size)
+                   block_size=block_size, mesh=mesh)
     for _ in range(power_iters):
         Q, _ = jnp.linalg.qr(Y)
-        Y = Kop.matmat(Q, block_size=block_size)
+        Y = Kop.matmat(Q, block_size=block_size, mesh=mesh)
     Q, _ = jnp.linalg.qr(Y)
-    B = Q.T @ Kop.matmat(Q, block_size=block_size)
+    B = Q.T @ Kop.matmat(Q, block_size=block_size, mesh=mesh)
     B = 0.5 * (B + B.T)
     lam = jnp.linalg.eigvalsh(B)[::-1]
     return lam[:k]
@@ -301,7 +427,8 @@ def streaming_topk_eigvals(K, k: int, key: Optional[jax.Array] = None,
 
 def error_vs_best_rank_k(K, approx: SPSDApprox, k: int, method: str = "auto",
                          block_size: Optional[int] = None, probes: int = 64,
-                         key: Optional[jax.Array] = None) -> jnp.ndarray:
+                         key: Optional[jax.Array] = None,
+                         mesh=None) -> jnp.ndarray:
     """||K - CUC^T||_F² / ||K - K_k||_F²  (the 1+ε target of Thm 3/Remark 4).
 
     Streaming methods use ||K - K_k||_F² = ||K||_F² - Σ_{i≤k} λ_i² (K SPSD)
@@ -317,12 +444,13 @@ def error_vs_best_rank_k(K, approx: SPSDApprox, k: int, method: str = "auto",
         return jnp.sum(R * R) / tail
     key = jax.random.PRNGKey(0) if key is None else key
     keig, kprobe = jax.random.split(key)
-    lam = streaming_topk_eigvals(Kop, k, keig, block_size=block_size)
+    lam = streaming_topk_eigvals(Kop, k, keig, block_size=block_size,
+                                 mesh=mesh)
     if method == "blocked":
-        num, fro2 = _blocked_residual_fro2(Kop, approx, block_size)
+        num, fro2 = _blocked_residual_fro2(Kop, approx, block_size, mesh)
     elif method == "hutchinson":
         num, fro2 = _hutchinson_residual_fro2(Kop, approx, probes, kprobe,
-                                              block_size)
+                                              block_size, mesh)
     else:
         raise ValueError(f"unknown error method {method!r}")
     tail = jnp.maximum(fro2 - jnp.sum(lam ** 2), 1e-12 * fro2)

@@ -1,0 +1,404 @@
+"""Single-sweep multi-product panel engine (the Table-3 "#Entries" workhorse).
+
+The paper's linear-in-n claim hinges on how few kernel entries are ever
+*evaluated*.  PR 1's streaming substrate evaluated each (b × n) row panel once
+per product — once for C = K P, once per S^T K S, once per error estimator —
+so on-the-fly kernels paid 4-6× the entry cost the model actually needs.
+
+This module fixes that with *panel plans*: small accumulator objects that all
+consume the same panel.  ``sweep_panels`` walks the row panels exactly once
+under ``jax.lax.scan`` and feeds every plan from the single materialization,
+so one sweep yields an arbitrary set of products (K @ S for each sketch,
+column gathers for C, diag/trace/Frobenius accumulators, Hutchinson probes,
+adaptive residual norms) for one evaluation of each kernel tile.
+
+A plan implements three methods::
+
+    init(nrows, ncols)            -> carry (f32 pytree of zeros)
+    update(carry, panel, idx, valid) -> carry   # MUST mask by ``valid``
+    finalize(carry)               -> result
+
+All carries are pure sums of per-panel contributions (row-indexed outputs are
+scatter-added into zero-initialized buffers), which makes the engine
+data-parallel for free: with a ``Mesh`` carrying a ``data`` axis
+(``distributed/sharding.py``), the panel starts are partitioned across
+devices with ``shard_map`` and the per-device partial carries are reduced
+with ``psum``.  On a trivial (single-device / absent) mesh the engine falls
+back to the plain sequential scan — bit-identical results either way, up to
+float reassociation across devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax >= 0.4.35 re-export; fall back to the experimental home
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on jax version
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# Row panels are capped at roughly this many f32 elements (b·ncols), so the
+# streaming paths stay ~128 MB regardless of problem size.
+PANEL_ELEMENT_BUDGET = 1 << 25
+
+
+def panel_block_size(ncols: int, block_size: Optional[int]) -> int:
+    if block_size is not None:
+        return max(1, int(block_size))
+    return max(128, min(4096, PANEL_ELEMENT_BUDGET // max(ncols, 1)))
+
+
+def resolved_block_size(nrows: int, ncols: int, block_size: Optional[int],
+                        data_parallel: int = 1) -> int:
+    """The panel height a sweep actually uses.
+
+    The budgeted (or requested) size, clamped to ``nrows`` so short operators
+    pay no clamp padding.  With ``data_parallel`` > 1 the size is shrunk so
+    the panel count is (as nearly as possible) a multiple of the device
+    count — sentinel padding panels would each evaluate a full b×ncols block
+    of throwaway kernel entries, so balancing by *resizing* keeps the sharded
+    sweep's evaluated-entry count within one thin panel of the sequential
+    sweep's.
+    """
+    bs = min(panel_block_size(ncols, block_size), max(nrows, 1))
+    if data_parallel > 1:
+        nblocks = -(-nrows // bs)
+        target = data_parallel * (-(-nblocks // data_parallel))
+        bs = -(-nrows // target)
+    return bs
+
+
+def num_panels(nrows: int, ncols: int, block_size: Optional[int],
+               data_parallel: int = 1) -> int:
+    """How many panels one sweep over ``nrows`` rows touches."""
+    return -(-nrows // resolved_block_size(nrows, ncols, block_size,
+                                           data_parallel))
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MatmulPlan:
+    """A @ V for V (ncols × m): the streaming matmat as a plan."""
+
+    V: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.V,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def init(self, nrows: int, ncols: int):
+        return jnp.zeros((nrows, self.V.shape[1]), jnp.float32)
+
+    def update(self, carry, panel, idx, valid):
+        y = panel.astype(jnp.float32) @ self.V.astype(jnp.float32)
+        return carry.at[idx].add(y * valid.astype(jnp.float32)[:, None])
+
+    def finalize(self, carry):
+        return carry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ColumnGatherPlan:
+    """A[:, col_idx] — the C = K P gather, free once the panel exists."""
+
+    col_idx: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.col_idx,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def init(self, nrows: int, ncols: int):
+        return jnp.zeros((nrows, self.col_idx.shape[0]), jnp.float32)
+
+    def update(self, carry, panel, idx, valid):
+        y = jnp.take(panel, self.col_idx, axis=1).astype(jnp.float32)
+        return carry.at[idx].add(y * valid.astype(jnp.float32)[:, None])
+
+    def finalize(self, carry):
+        return carry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SketchRightPlan:
+    """A S for a sketch object exposing ``S.right`` (SRHT / CountSketch)."""
+
+    S: object
+    s: int
+
+    def tree_flatten(self):
+        return (self.S,), (self.s,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+    def init(self, nrows: int, ncols: int):
+        return jnp.zeros((nrows, self.s), jnp.float32)
+
+    def update(self, carry, panel, idx, valid):
+        y = self.S.right(panel.astype(jnp.float32))
+        return carry.at[idx].add(y * valid.astype(jnp.float32)[:, None])
+
+    def finalize(self, carry):
+        return carry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FrobeniusPlan:
+    """||A||_F² accumulated panel-by-panel."""
+
+    def tree_flatten(self):
+        return (), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls()
+
+    def init(self, nrows: int, ncols: int):
+        return jnp.zeros((), jnp.float32)
+
+    def update(self, carry, panel, idx, valid):
+        p32 = panel.astype(jnp.float32)
+        return carry + jnp.sum(p32 * p32 * valid.astype(jnp.float32)[:, None])
+
+    def finalize(self, carry):
+        return carry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DiagPlan:
+    """diag(A) (square operators): one gather per panel row."""
+
+    def tree_flatten(self):
+        return (), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls()
+
+    def init(self, nrows: int, ncols: int):
+        return jnp.zeros((nrows,), jnp.float32)
+
+    def update(self, carry, panel, idx, valid):
+        d = jnp.take_along_axis(panel, idx[:, None], axis=1)[:, 0]
+        return carry.at[idx].add(d.astype(jnp.float32)
+                                 * valid.astype(jnp.float32))
+
+    def finalize(self, carry):
+        return carry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ResidualFroPlan:
+    """(||K - C M||_F², ||K||_F²) for a low-rank C M (M = U C^T) in one pass.
+
+    ``C``: (nrows, c) f32, ``M``: (c, ncols) f32.
+    """
+
+    C: jnp.ndarray
+    M: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.C, self.M), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init(self, nrows: int, ncols: int):
+        return (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def update(self, carry, panel, idx, valid):
+        p32 = panel.astype(jnp.float32)
+        resid = p32 - jnp.take(self.C, idx, axis=0) @ self.M
+        v = valid.astype(jnp.float32)[:, None]
+        return (carry[0] + jnp.sum(resid * resid * v),
+                carry[1] + jnp.sum(p32 * p32 * v))
+
+    def finalize(self, carry):
+        return carry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ProjResidualColNormPlan:
+    """Adaptive-sampling residual column norms ||(I − Q Qᵀ) K||² in ONE pass.
+
+    With Q an orthonormal basis of range(C) (zero-σ columns masked to 0),
+    ||(I − QQᵀ) K e_j||² = ||K e_j||² − ||Qᵀ K e_j||², so one sweep
+    accumulating per-column norms of K alongside the (q × ncols) product
+    Qᵀ K replaces PR 1's matmat pass + residual pass per adaptive round.
+    """
+
+    Q: jnp.ndarray           # (nrows, q) f32, orthonormal (masked) columns
+
+    def tree_flatten(self):
+        return (self.Q,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def init(self, nrows: int, ncols: int):
+        return (jnp.zeros((ncols,), jnp.float32),
+                jnp.zeros((self.Q.shape[1], ncols), jnp.float32))
+
+    def update(self, carry, panel, idx, valid):
+        colnorms, QtK = carry
+        p32 = panel.astype(jnp.float32) * valid.astype(jnp.float32)[:, None]
+        colnorms = colnorms + jnp.sum(p32 * p32, axis=0)
+        QtK = QtK + jnp.take(self.Q, idx, axis=0).T @ p32
+        return (colnorms, QtK)
+
+    def finalize(self, carry):
+        colnorms, QtK = carry
+        return jnp.maximum(colnorms - jnp.sum(QtK * QtK, axis=0), 0.0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GramPlan:
+    """Σ panelᵀ panel — the blocked Gram pass (R Rᵀ over column panels)."""
+
+    dim: int
+
+    def tree_flatten(self):
+        return (), (self.dim,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0])
+
+    def init(self, nrows: int, ncols: int):
+        return jnp.zeros((self.dim, self.dim), jnp.float32)
+
+    def update(self, carry, panel, idx, valid):
+        p32 = panel.astype(jnp.float32) * valid.astype(jnp.float32)[:, None]
+        return carry + p32.T @ p32
+
+    def finalize(self, carry):
+        return carry
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RowQuadFormPlan:
+    """q_i = panel_i W panel_iᵀ per row — blocked leverage-score scoring."""
+
+    W: jnp.ndarray           # (ncols, ncols) f32 (small: r × r)
+
+    def tree_flatten(self):
+        return (self.W,), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0])
+
+    def init(self, nrows: int, ncols: int):
+        return jnp.zeros((nrows,), jnp.float32)
+
+    def update(self, carry, panel, idx, valid):
+        p32 = panel.astype(jnp.float32)
+        q = jnp.sum((p32 @ self.W) * p32, axis=1)
+        return carry.at[idx].add(q * valid.astype(jnp.float32))
+
+    def finalize(self, carry):
+        return carry
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def _mesh_data_axes(mesh: Optional[Mesh]):
+    """The ('pod','data') subset present in ``mesh`` — lazy import so this
+    module stays importable without the distributed package."""
+    if mesh is None:
+        return ()
+    from repro.distributed.sharding import data_axes
+    return data_axes(mesh)
+
+
+def mesh_data_size(mesh: Optional[Mesh]) -> int:
+    """Total data-parallel width of ``mesh`` (1 for None / trivial meshes)."""
+    axes = _mesh_data_axes(mesh)
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def sweep_panels(panel_fn, nrows: int, ncols: int, plans: Sequence,
+                 block_size: Optional[int] = None,
+                 mesh: Optional[Mesh] = None):
+    """Apply every plan to each (b × ncols) row panel in a single pass.
+
+    ``panel_fn(idx)`` materializes rows ``idx`` (a (b,) int array; tail panels
+    are clamped to the last row and masked via ``valid``).  Returns
+    ``[plan.finalize(carry) for plan in plans]``.
+
+    With a non-trivial ``mesh`` the panel starts are partitioned over the
+    mesh's data axes via ``shard_map``; each device scans its local panels and
+    the additive carries are ``psum``-reduced, so results match the
+    single-device sweep to float-reassociation accuracy.
+    """
+    plans = list(plans)
+    dp = mesh_data_size(mesh)
+    bs = resolved_block_size(nrows, ncols, block_size, dp)
+    nblocks = -(-nrows // bs)
+
+    def local_sweep(starts):
+        def body(carry, start):
+            idx = start + jnp.arange(bs)
+            valid = idx < nrows
+            idx = jnp.clip(idx, 0, nrows - 1)
+            panel = panel_fn(idx)
+            carry = tuple(p.update(c, panel, idx, valid)
+                          for p, c in zip(plans, carry))
+            return carry, None
+        init = tuple(p.init(nrows, ncols) for p in plans)
+        carry, _ = jax.lax.scan(body, init, starts)
+        return carry
+
+    starts = jnp.arange(nblocks) * bs
+    if dp > 1:
+        axes = _mesh_data_axes(mesh)
+        # resolved_block_size already rebalanced the panel count to (near) a
+        # multiple of dp; any remainder is padded with sentinel starts == n
+        # (``valid`` all-False -> exact zero contributions, ≤ dp-1 thin
+        # panels of waste).
+        pad = (-nblocks) % dp
+        if pad:
+            starts = jnp.concatenate(
+                [starts, jnp.full((pad,), nrows, starts.dtype)])
+
+        def sharded(starts_local):
+            carry = local_sweep(starts_local)
+            return jax.tree_util.tree_map(
+                lambda x: jax.lax.psum(x, axes), carry)
+
+        carry = _shard_map(sharded, mesh=mesh,
+                           in_specs=P(axes), out_specs=P(),
+                           check_rep=False)(starts)
+    else:
+        carry = local_sweep(starts)
+    return [p.finalize(c) for p, c in zip(plans, carry)]

@@ -1,6 +1,8 @@
 from repro.distributed.sharding import (  # noqa: F401
     batch_pspec,
     cache_shardings,
+    data_axes,
+    data_parallel_mesh,
     param_pspec,
     param_shardings,
     tree_shardings,

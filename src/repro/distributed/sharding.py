@@ -51,6 +51,18 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 
 
+def data_parallel_mesh(devices=None) -> Optional[Mesh]:
+    """A 1-D ('data',) mesh over the local devices — the mesh the panel-sweep
+    engine (``repro.core.sweep``) shards over.  Returns None when only one
+    device is visible, which every ``mesh=`` consumer treats as the
+    sequential single-device fallback."""
+    import numpy as np
+    devices = jax.devices() if devices is None else list(devices)
+    if len(devices) <= 1:
+        return None
+    return Mesh(np.asarray(devices), ("data",))
+
+
 # ---------------------------------------------------------------------------
 # parameter rules
 # ---------------------------------------------------------------------------

@@ -85,6 +85,70 @@ def _rbf_matmat_kernel(xr_ref, xc_ref, v_ref, o_ref, *, gamma: float):
     )
 
 
+def _rbf_matmat_multi_kernel(xr_ref, xc_ref, *refs, gamma: float, nv: int):
+    """Multi-right-hand-side fusion: one K tile, ``nv`` contractions.
+
+    The (BLOCK_R, BLOCK_C) kernel tile is produced once on the MXU/VPU and
+    immediately contracted against every (BLOCK_C, m_i) right-hand tile while
+    still in VMEM — the single-sweep panel engine at the kernel-tile level.
+    ``refs`` is ``nv`` V refs followed by ``nv`` output accumulator refs.
+    """
+    v_refs, o_refs = refs[:nv], refs[nv:]
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        for o_ref in o_refs:
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+    xr = xr_ref[...].astype(jnp.float32)
+    xc = xc_ref[...].astype(jnp.float32)
+    cross = jax.lax.dot_general(
+        xr, xc,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    rr = jnp.sum(xr * xr, axis=1, keepdims=True)
+    cc = jnp.sum(xc * xc, axis=1, keepdims=True)
+    k_tile = jnp.exp(-gamma * jnp.maximum(rr + cc.T - 2.0 * cross, 0.0))
+    for v_ref, o_ref in zip(v_refs, o_refs):
+        o_ref[...] += jax.lax.dot_general(
+            k_tile, v_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+def rbf_matmat_multi_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs,
+                            sigma: float, interpret: bool = False):
+    """[K(Xr, Xc) @ V for V in Vs] over padded inputs, one kernel launch."""
+    nr, d = Xr.shape
+    nc = Xc.shape[0]
+    assert nr % BLOCK_R == 0 and nc % BLOCK_C == 0, (nr, nc)
+    for V in Vs:
+        assert V.shape[0] == nc and V.shape[1] % 128 == 0, V.shape
+    gamma = 1.0 / (2.0 * float(sigma) ** 2)
+    grid = (nr // BLOCK_R, nc // BLOCK_C)
+    return pl.pallas_call(
+        functools.partial(_rbf_matmat_multi_kernel, gamma=gamma, nv=len(Vs)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
+        ] + [
+            pl.BlockSpec((BLOCK_C, V.shape[1]), lambda i, j: (j, 0))
+            for V in Vs
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_R, V.shape[1]), lambda i, j: (i, 0))
+            for V in Vs
+        ],
+        out_shape=[jax.ShapeDtypeStruct((nr, V.shape[1]), jnp.float32)
+                   for V in Vs],
+        interpret=interpret,
+    )(Xr, Xc, *Vs)
+
+
 def rbf_matmat_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, V: jnp.ndarray,
                       sigma: float, interpret: bool = False) -> jnp.ndarray:
     """K(Xr, Xc) @ V over padded inputs; all dims must be tile multiples."""

@@ -70,6 +70,29 @@ def rbf_matmat(X: jnp.ndarray, V: jnp.ndarray, sigma: float,
     return out[:, 0] if squeeze else out
 
 
+@partial(jax.jit, static_argnames=("sigma", "use_pallas"))
+def rbf_matmat_multi(X: jnp.ndarray, Vs, sigma: float,
+                     use_pallas: bool = True):
+    """[K(X, X) @ V for V in Vs] with each kernel tile computed ONCE.
+
+    The sweep-engine fast path: all right-hand sides (projection sketches,
+    Hutchinson probes, one-hot column gathers for C = K P) are contracted
+    against the same VMEM-resident kernel tile in a single Pallas launch, so
+    the n×n entry evaluation is paid once for the whole product bundle.
+    """
+    Vs = tuple(Vs)
+    if not use_pallas:
+        return tuple(_ref.rbf_matmat(X, V, sigma) for V in Vs)
+    n = X.shape[0]
+    ms = [V.shape[1] for V in Vs]
+    mult = max(_k.BLOCK_R, _k.BLOCK_C)
+    Xp = _pad_rows(X, mult)
+    Vps = tuple(_pad_cols(_pad_rows(V, mult), 128) for V in Vs)
+    outs = _k.rbf_matmat_multi_padded(Xp, Xp, Vps, sigma,
+                                      interpret=_INTERPRET)
+    return tuple(out[:n, :m] for out, m in zip(outs, ms))
+
+
 @partial(jax.jit, static_argnames=("sigma",))
 def sketched_gram(Xs: jnp.ndarray, sigma: float,
                   scales: jnp.ndarray | None = None) -> jnp.ndarray:

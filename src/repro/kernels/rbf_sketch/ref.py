@@ -21,6 +21,12 @@ def rbf_matmat(X: jnp.ndarray, V: jnp.ndarray, sigma: float) -> jnp.ndarray:
     return rbf_block(X, X, sigma) @ V.astype(jnp.float32)
 
 
+def rbf_matmat_multi(X: jnp.ndarray, Vs, sigma: float):
+    """[K(X, X) @ V for V in Vs] oracle (materializes K — small shapes only)."""
+    K = rbf_block(X, X, sigma)
+    return tuple(K @ V.astype(jnp.float32) for V in Vs)
+
+
 def sketched_gram(Xs: jnp.ndarray, sigma: float,
                   scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """S^T K S for a column-selection sketch: rows Xs = X[S.indices]."""

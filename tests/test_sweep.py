@@ -1,0 +1,265 @@
+"""Single-sweep panel engine: plan parity vs dense, entry-count guarantees
+(CountingOperator), the fused Pallas multi-RHS path, padding masks, and the
+blocked-Gram CUR leverage scores."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cur, spsd
+from repro.core import sketch as sk
+from repro.core import sweep as sw
+from repro.core.adaptive import _residual_column_norms, uniform_adaptive2_indices
+from repro.core.instrument import CountingOperator
+from repro.core.kernelop import RBFKernel
+from repro.core.leverage import (column_leverage_scores_gram, pinv,
+                                 row_leverage_scores, row_leverage_scores_gram)
+
+
+def _clustered(seed, n=400, d=8, k=8):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 2.5
+    labels = rng.integers(0, k, size=n)
+    X = centers[labels] + rng.normal(size=(n, d)) * 0.4
+    return jnp.asarray(X, jnp.float32)
+
+
+def _rbf(seed, n=400, sigma=2.0, **kw):
+    return RBFKernel(_clustered(seed, n=n), sigma=sigma, **kw)
+
+
+# ---------------------------------------------------------------------------
+# engine: every plan from one pass matches the dense reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_size", [64, 100, None])
+def test_multi_plan_sweep_matches_dense(block_size):
+    """One sweep, five plans — each result equals its dense counterpart."""
+    Kop = _rbf(0, n=333)
+    Kd = np.asarray(Kop.full(), np.float32)
+    V = jax.random.normal(jax.random.PRNGKey(1), (Kop.n, 7), jnp.float32)
+    cidx = jnp.asarray([3, 50, 200, 331])
+    C32 = jnp.asarray(Kd[:, :5])
+    M = jnp.asarray(np.linalg.pinv(np.asarray(C32)) @ Kd)
+
+    mat, gat, fro, diag, (num, den) = Kop.sweep(
+        [sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx), sw.FrobeniusPlan(),
+         sw.DiagPlan(), sw.ResidualFroPlan(C32, M)],
+        block_size=block_size)
+    np.testing.assert_allclose(np.asarray(mat), Kd @ np.asarray(V),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(gat), Kd[:, np.asarray(cidx)],
+                               rtol=1e-5, atol=1e-6)
+    assert float(fro) == pytest.approx(float((Kd ** 2).sum()), rel=1e-4)
+    np.testing.assert_allclose(np.asarray(diag), np.diagonal(Kd),
+                               rtol=1e-5, atol=1e-6)
+    resid = Kd - np.asarray(C32) @ np.asarray(M)
+    assert float(num) == pytest.approx(float((resid ** 2).sum()), rel=1e-3)
+    assert float(den) == pytest.approx(float((Kd ** 2).sum()), rel=1e-4)
+
+
+def test_sketch_right_plan_matches_dense():
+    Kop = _rbf(1)
+    Kd = np.asarray(Kop.full(), np.float32)
+    for kind in ("srht", "countsketch"):
+        S = sk.make_sketch(kind, jax.random.PRNGKey(2), Kop.n, 48)
+        (KS,) = Kop.sweep([sk.plan_for_sketch(S)], block_size=128)
+        ref = np.asarray(S.right(jnp.asarray(Kd)))
+        np.testing.assert_allclose(np.asarray(KS), ref, rtol=5e-3, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused fast_model: same numbers as the unfused routes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "srht", "countsketch"])
+def test_fused_fast_model_matches_dense_route(kind):
+    """Same key -> same sketch -> the one-sweep model equals the dense one."""
+    Kop = _rbf(2)
+    ap_f = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=20, s=80,
+                           s_sketch=kind, streaming=True)
+    ap_d = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=20, s=80,
+                           s_sketch=kind, streaming=False)
+    np.testing.assert_allclose(np.asarray(ap_f.C), np.asarray(ap_d.C),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ap_f.U), np.asarray(ap_d.U),
+                               rtol=2e-2, atol=1e-3)
+    e_f = float(spsd.relative_error(Kop, ap_f, method="dense"))
+    e_d = float(spsd.relative_error(Kop, ap_d, method="dense"))
+    assert abs(e_f - e_d) < 1e-3
+
+
+def test_fast_model_with_error_matches_hutchinson():
+    """The fused model+error sweep returns exactly the Hutchinson estimate."""
+    Kop = _rbf(3)
+    ekey = jax.random.PRNGKey(11)
+    ap, err = spsd.fast_model_with_error(Kop, jax.random.PRNGKey(0), c=20,
+                                         s=80, probes=64, error_key=ekey)
+    ref = float(spsd.relative_error(Kop, ap, method="hutchinson", probes=64,
+                                    key=ekey))
+    assert float(err) == pytest.approx(ref, rel=1e-4)
+    e_dense = float(spsd.relative_error(Kop, ap, method="dense"))
+    assert float(err) == pytest.approx(e_dense, rel=0.5)
+
+
+# ---------------------------------------------------------------------------
+# the entry-count guarantee (CountingOperator)
+# ---------------------------------------------------------------------------
+
+def test_fast_model_plus_error_two_sweeps_max():
+    """fast_model evaluates each row panel once; + streaming error ≤ 2×."""
+    Kc = CountingOperator(_rbf(4))
+    ap = spsd.fast_model(Kc, jax.random.PRNGKey(0), c=20, s=80,
+                         s_sketch="gaussian", streaming=True)
+    assert Kc.counts["sweeps"] == 1          # C and K S from ONE pass
+    assert Kc.counts["columns"] == 0         # no separate C gather
+    assert Kc.counts["fulls"] == 0
+    n = Kc.n
+    assert Kc.counts["entries"] <= 1.1 * n * n
+
+    float(spsd.relative_error(Kc, ap, method="blocked"))
+    assert Kc.counts["sweeps"] == 2          # model + error ≤ 2 panel passes
+    assert Kc.counts["entries"] <= 2.2 * n * n
+
+
+def test_fused_model_with_error_single_sweep():
+    Kc = CountingOperator(_rbf(5))
+    ap, err = spsd.fast_model_with_error(Kc, jax.random.PRNGKey(0), c=20,
+                                         s=80, probes=32)
+    assert Kc.counts["sweeps"] == 1
+    assert Kc.counts["fulls"] == 0 and Kc.counts["columns"] == 0
+    assert np.isfinite(float(err))
+
+
+def test_column_sketch_fast_model_needs_no_sweep():
+    """uniform/leverage S: C is an n×c gather, StKS an s×s block — 0 sweeps."""
+    Kc = CountingOperator(_rbf(6))
+    spsd.fast_model(Kc, jax.random.PRNGKey(0), c=20, s=80, s_sketch="leverage")
+    assert Kc.counts["sweeps"] == 0
+    assert Kc.counts["columns"] == 1 and Kc.counts["blocks"] == 1
+
+
+def test_adaptive_single_sweep_per_round():
+    """PR-1 did 2 full passes per adaptive round; the Q-projection plan does 1."""
+    Kc = CountingOperator(_rbf(7))
+    idx = uniform_adaptive2_indices(Kc, jax.random.PRNGKey(0), 12)
+    assert idx.shape == (12,)
+    assert Kc.counts["sweeps"] == 2          # one per adaptive round
+    assert Kc.counts["columns"] == 2         # the n×(c/3) C gathers
+
+
+def test_adaptive_norms_match_projection_formula():
+    Kop = _rbf(8)
+    idx = jnp.arange(12)
+    Kd = np.asarray(Kop.full(), np.float32)
+    C = np.asarray(Kop.columns(idx), np.float32)
+    resid = Kd - C @ (np.asarray(pinv(jnp.asarray(C))) @ Kd)
+    ref = (resid ** 2).sum(axis=0)
+    got = np.asarray(_residual_column_norms(Kop, idx))
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas multi-RHS path
+# ---------------------------------------------------------------------------
+
+def test_pallas_sweep_fast_path_matches_generic():
+    X = _clustered(9, n=300)
+    Kp = RBFKernel(X, sigma=2.0, use_pallas=True)
+    Kg = RBFKernel(X, sigma=2.0, use_pallas=False)
+    V = jax.random.normal(jax.random.PRNGKey(3), (300, 5), jnp.float32)
+    cidx = jnp.asarray([0, 17, 255])
+    plans = lambda: [sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx)]
+    got = Kp.sweep(plans())
+    ref = Kg.sweep(plans(), block_size=128)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(ref[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# padding masks (ragged batches)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["gaussian", "srht", "countsketch"])
+def test_masked_sketch_sym_is_unbiased(kind):
+    """Sᵀ M K_pad M S must equal the sketch applied to the unpadded K."""
+    n, npad = 150, 200
+    Ksmall = np.asarray(_rbf(10, n=n).full(), np.float32)
+    Kpad = np.full((npad, npad), 7.7, np.float32)   # junk padding entries
+    Kpad[:n, :n] = Ksmall
+    mask = (jnp.arange(npad) < n).astype(jnp.float32)
+    S = sk.make_sketch(kind, jax.random.PRNGKey(5), npad, 40)
+    Sm = sk.MaskedSketch(S, mask)
+    got = np.asarray(Sm.sym(jnp.asarray(Kpad)))
+    Kmasked = np.zeros_like(Kpad)
+    Kmasked[:n, :n] = Ksmall
+    ref = np.asarray(S.sym(jnp.asarray(Kmasked)))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+    assert np.all(np.isfinite(got))
+
+
+def test_fast_model_batched_ragged_padding():
+    """Ragged batch padded to a common n: junk rows must not bias the model."""
+    rng = np.random.default_rng(11)
+    n_valid = np.array([150, 200])
+    npad = 200
+    Xb = rng.normal(size=(2, npad, 6))
+    for b, nv in enumerate(n_valid):
+        Xb[b, nv:] = 99.0                    # poison the padding rows
+    Xb = jnp.asarray(Xb, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(7), 2)
+    bat = spsd.fast_model_batched(RBFKernel(Xb, sigma=1.5), keys, c=12, s=48,
+                                  s_sketch="gaussian",
+                                  n_valid=jnp.asarray(n_valid))
+    assert bat.C.shape == (2, npad, 12) and bat.U.shape == (2, 12, 12)
+    assert np.all(np.isfinite(np.asarray(bat.U)))
+    for b, nv in enumerate(n_valid):
+        # padding rows of C are masked to exactly zero
+        np.testing.assert_array_equal(np.asarray(bat.C[b][nv:]), 0.0)
+        # P sampled the valid range only
+        assert int(jnp.max(bat.P_indices[b])) < nv
+        # and the model approximates the TRUE (unpadded) kernel
+        Ktrue = RBFKernel(Xb[b, :nv], sigma=1.5)
+        ap = spsd.SPSDApprox(C=bat.C[b][:nv], U=bat.U[b])
+        err = float(spsd.relative_error(Ktrue, ap, method="dense"))
+        assert np.isfinite(err) and err < 0.5, (b, err)
+
+
+# ---------------------------------------------------------------------------
+# CUR: blocked-Gram leverage scores + streaming routing
+# ---------------------------------------------------------------------------
+
+def test_gram_leverage_scores_match_svd_route():
+    rng = np.random.default_rng(12)
+    R = jnp.asarray(rng.normal(size=(15, 300)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(column_leverage_scores_gram(R, 64)),
+                               np.asarray(row_leverage_scores(R.T)),
+                               rtol=1e-3, atol=1e-4)
+    C = jnp.asarray(rng.normal(size=(300, 12)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(row_leverage_scores_gram(C, 64)),
+                               np.asarray(row_leverage_scores(C)),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_gram_leverage_rank_deficient():
+    rng = np.random.default_rng(13)
+    B = rng.normal(size=(4, 200)).astype(np.float32)
+    R = jnp.asarray(rng.normal(size=(10, 4)).astype(np.float32) @ B)  # rank 4
+    lev = np.asarray(column_leverage_scores_gram(R, 64))
+    assert np.all(np.isfinite(lev)) and np.all(lev >= -1e-5)
+    assert float(lev.sum()) == pytest.approx(4.0, rel=0.05)   # sum == rank
+
+
+def test_fast_cur_streaming_leverage_runs():
+    rng = np.random.default_rng(14)
+    A = jnp.asarray(rng.normal(size=(250, 180)), jnp.float32)
+    kw = dict(c=12, r=12, sc=48, sr=48, sketch_kind="leverage")
+    ap_s = cur.fast_cur(A, jax.random.PRNGKey(3), streaming=True, **kw)
+    ap_d = cur.fast_cur(A, jax.random.PRNGKey(3), streaming=False, **kw)
+    # identical sampling keys + (near-)identical scores -> same error regime
+    e_s = float(cur.relative_error(A, ap_s))
+    e_d = float(cur.relative_error(A, ap_d))
+    assert np.isfinite(e_s) and np.isfinite(e_d)
+    assert abs(e_s - e_d) < 0.25

@@ -1,0 +1,125 @@
+"""shard_map-parallel sweep: sharded == single-device to 1e-5, identical
+shapes, automatic fallback on trivial meshes.
+
+The multi-device cases need >1 local devices; CI runs them in a dedicated job
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (they skip on the
+default single-CPU run, where only the fallback tests execute).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import spsd
+from repro.core import sweep as sw
+from repro.core.adaptive import uniform_adaptive2_indices
+from repro.core.kernelop import RBFKernel
+from repro.core.sweep import mesh_data_size
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _mesh():
+    return Mesh(np.asarray(jax.devices()), ("data",))
+
+
+def _rbf(seed, n=533, d=8, sigma=2.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, d)) * 2.5
+    X = centers[rng.integers(0, 8, size=n)] + rng.normal(size=(n, d)) * 0.4
+    return RBFKernel(jnp.asarray(X, jnp.float32), sigma=sigma)
+
+
+# ---------------------------------------------------------------------------
+# fallback: trivial meshes route through the sequential scan
+# ---------------------------------------------------------------------------
+
+def test_single_device_mesh_falls_back():
+    Kop = _rbf(0, n=200)
+    V = jax.random.normal(jax.random.PRNGKey(1), (200, 4), jnp.float32)
+    mesh1 = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    assert mesh_data_size(None) == 1 and mesh_data_size(mesh1) == 1
+    a = np.asarray(Kop.matmat(V, block_size=64))
+    b = np.asarray(Kop.matmat(V, block_size=64, mesh=mesh1))
+    np.testing.assert_array_equal(a, b)      # same code path, bitwise equal
+
+
+def test_model_axis_only_mesh_is_trivial_for_sweeps():
+    mesh = Mesh(np.asarray(jax.devices()), ("model",))
+    assert mesh_data_size(mesh) == 1         # no data axis -> fallback
+
+
+# ---------------------------------------------------------------------------
+# multi-device parity
+# ---------------------------------------------------------------------------
+
+@multidevice
+@pytest.mark.parametrize("n", [533, 512])    # panel-count not/divisible by 8
+def test_sharded_sweep_matches_local(n):
+    Kop = _rbf(1, n=n)
+    V = jax.random.normal(jax.random.PRNGKey(2), (n, 6), jnp.float32)
+    cidx = jnp.asarray([1, n // 2, n - 1])
+    plans = lambda: [sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx),
+                     sw.FrobeniusPlan()]
+    loc = Kop.sweep(plans(), block_size=64)
+    shd = Kop.sweep(plans(), block_size=64, mesh=_mesh())
+    for a, b in zip(loc, shd):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@multidevice
+def test_sharded_fast_model_matches_local():
+    Kop = _rbf(2)
+    key = jax.random.PRNGKey(0)
+    ap_l = spsd.fast_model(Kop, key, c=20, s=80, s_sketch="gaussian",
+                           streaming=True)
+    ap_s = spsd.fast_model(Kop, key, c=20, s=80, s_sketch="gaussian",
+                           streaming=True, mesh=_mesh())
+    assert ap_s.C.shape == ap_l.C.shape and ap_s.U.shape == ap_l.U.shape
+    np.testing.assert_allclose(np.asarray(ap_s.C), np.asarray(ap_l.C),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ap_s.U), np.asarray(ap_l.U),
+                               rtol=1e-4, atol=1e-4)
+
+
+@multidevice
+def test_sharded_error_metrics_match_local():
+    Kop = _rbf(3)
+    ap = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=20, s=80,
+                         s_sketch="gaussian", streaming=True)
+    mesh = _mesh()
+    e_l = float(spsd.relative_error(Kop, ap, method="blocked"))
+    e_s = float(spsd.relative_error(Kop, ap, method="blocked", mesh=mesh))
+    assert e_s == pytest.approx(e_l, abs=1e-5)
+    h_l = float(spsd.relative_error(Kop, ap, method="hutchinson", probes=32,
+                                    key=jax.random.PRNGKey(1)))
+    h_s = float(spsd.relative_error(Kop, ap, method="hutchinson", probes=32,
+                                    key=jax.random.PRNGKey(1), mesh=mesh))
+    assert h_s == pytest.approx(h_l, abs=1e-5)
+
+
+@multidevice
+def test_sharded_fused_model_with_error_matches_local():
+    Kop = _rbf(4)
+    key = jax.random.PRNGKey(0)
+    ap_l, e_l = spsd.fast_model_with_error(Kop, key, c=20, s=80, probes=32)
+    ap_s, e_s = spsd.fast_model_with_error(Kop, key, c=20, s=80, probes=32,
+                                           mesh=_mesh())
+    np.testing.assert_allclose(np.asarray(ap_s.U), np.asarray(ap_l.U),
+                               rtol=1e-4, atol=1e-4)
+    assert float(e_s) == pytest.approx(float(e_l), abs=1e-5)
+
+
+@multidevice
+def test_sharded_adaptive_matches_local():
+    Kop = _rbf(5)
+    key = jax.random.PRNGKey(0)
+    idx_l = np.asarray(uniform_adaptive2_indices(Kop, key, 12))
+    idx_s = np.asarray(uniform_adaptive2_indices(Kop, key, 12, mesh=_mesh()))
+    # residual norms match to 1e-5 -> identical sampling decisions
+    np.testing.assert_array_equal(idx_l, idx_s)
