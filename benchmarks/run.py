@@ -17,6 +17,12 @@ SUITES = ["spsd_error", "spsd_error_adaptive", "kpca", "spectral", "cur",
 
 SMOKE_JSON = os.path.join("results", "BENCH_smoke.json")
 
+# The per-PR tracked copy at the repo root: results/BENCH_smoke.json is
+# gitignored (CI-artifact only), so every smoke run also refreshes this file
+# and commits carry the measured trajectory in-tree.
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACKED_JSON = os.path.join(REPO_ROOT, "BENCH_pr3.json")
+
 
 def smoke(out: str = SMOKE_JSON) -> int:
     """Tiny-shape pass over every perf entry point, CI-sized (~1 min CPU).
@@ -63,8 +69,11 @@ def smoke(out: str = SMOKE_JSON) -> int:
         os.makedirs(out_dir, exist_ok=True)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
+    with open(TRACKED_JSON, "w") as f:       # tracked copy at the repo root
+        json.dump(payload, f, indent=2)
+        f.write("\n")
     print(f"\nsmoke benchmarks completed in {payload['total_seconds']:.1f}s "
-          f"-> {out}")
+          f"-> {out} (tracked copy: {TRACKED_JSON})")
     return 0
 
 

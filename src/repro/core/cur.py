@@ -17,8 +17,37 @@ import jax.numpy as jnp
 
 from repro.core import sketch as sk
 from repro.core import sweep as sweep_lib
+from repro.core.kernelop import SPSDOperator
 from repro.core.leverage import (column_leverage_scores_gram, pinv,
                                  row_leverage_scores, row_leverage_scores_gram)
+
+
+def _shape_of(A) -> tuple:
+    """(m, n) of a dense matrix or an implicit (square) ``SPSDOperator``."""
+    if isinstance(A, SPSDOperator):
+        return A.n, A.n
+    return A.shape
+
+
+def _rows_of(A, idx: jnp.ndarray) -> jnp.ndarray:
+    """A[idx, :] without densifying an implicit operator."""
+    if isinstance(A, SPSDOperator):
+        return A.block(jnp.asarray(idx), jnp.arange(A.n))
+    return jnp.take(A, idx, axis=0)
+
+
+def _cols_of(A, idx: jnp.ndarray) -> jnp.ndarray:
+    """A[:, idx] without densifying an implicit operator."""
+    if isinstance(A, SPSDOperator):
+        return A.columns(jnp.asarray(idx))
+    return jnp.take(A, idx, axis=1)
+
+
+def _block_of(A, ridx: jnp.ndarray, cidx: jnp.ndarray) -> jnp.ndarray:
+    """A[ridx][:, cidx] — an (|ridx| × |cidx|) block."""
+    if isinstance(A, SPSDOperator):
+        return A.block(jnp.asarray(ridx), jnp.asarray(cidx))
+    return jnp.take(jnp.take(A, ridx, axis=0), cidx, axis=1)
 
 
 class CURApprox(NamedTuple):
@@ -32,13 +61,17 @@ class CURApprox(NamedTuple):
         return self.C @ self.U @ self.R
 
 
-def select_cur_sketches(A: jnp.ndarray, key: jax.Array, c: int, r: int):
-    """Uniformly sample columns/rows (the paper's §5.3 setup)."""
+def select_cur_sketches(A, key: jax.Array, c: int, r: int):
+    """Uniformly sample columns/rows (the paper's §5.3 setup).
+
+    ``A`` may be dense or an implicit ``SPSDOperator`` (kernel CUR): only the
+    selected n×c / r×n panels are ever materialized.
+    """
     kc, kr = jax.random.split(key)
-    m, n = A.shape
+    m, n = _shape_of(A)
     cidx = jax.random.choice(kc, n, shape=(c,), replace=False)
     ridx = jax.random.choice(kr, m, shape=(r,), replace=False)
-    return jnp.take(A, cidx, axis=1), jnp.take(A, ridx, axis=0), cidx, ridx
+    return _cols_of(A, cidx), _rows_of(A, ridx), cidx, ridx
 
 
 def optimal_U(A: jnp.ndarray, C: jnp.ndarray, R: jnp.ndarray) -> jnp.ndarray:
@@ -56,7 +89,7 @@ def fast_U_cur(ScC: jnp.ndarray, ScASr: jnp.ndarray, RSr: jnp.ndarray) -> jnp.nd
     return pinv(ScC) @ ScASr.astype(jnp.float32) @ pinv(RSr)
 
 
-def blocked_right_sketch(A: jnp.ndarray, S, block_size: int = 1024,
+def blocked_right_sketch(A, S, block_size: int = 1024,
                          mesh=None) -> jnp.ndarray:
     """A S (m × s) streamed over row panels of A via the sweep engine.
 
@@ -64,19 +97,36 @@ def blocked_right_sketch(A: jnp.ndarray, S, block_size: int = 1024,
     SRHT, a zero-padded one on top); sweeping row panels keeps the peak
     footprint at O(b·n + m·s) — the CUR analogue of the SPSD panel protocol —
     and a non-trivial ``mesh`` shards the panels across devices.
+
+    An implicit ``SPSDOperator`` A routes through its own ``sweep``, so a
+    Pallas-backed kernel claims matmul-shaped sketches with the fused
+    (per-shard, rectangular-slab) launch.  For dense A under a non-trivial
+    mesh, each shard claims its contiguous row slab through the engine's
+    ``slab_fn`` hook — one ``S.right`` application per device instead of a
+    panel scan — whenever the per-device slab stays inside the panel element
+    budget (so the streaming memory story is preserved).
     """
+    if isinstance(A, SPSDOperator):
+        return sk.right_streaming(S, A, block_size=block_size, mesh=mesh)
     if isinstance(S, sk.GaussianSketch):
         return S.right(A)       # one GEMM; blocking would redraw S per block
     m, n = A.shape
+    plan = sweep_lib.SketchRightPlan(S, S.s)
+    dp = sweep_lib.mesh_data_size(mesh)
+    slab_fn = None
+    if dp > 1 and sweep_lib.local_slab_rows(m, n, block_size, dp) * n \
+            <= sweep_lib.PANEL_ELEMENT_BUDGET:
+        def slab_fn(row_idx, valid):
+            slab = jnp.take(A, row_idx, axis=0)
+            return (plan.update(plan.init(m, n), slab, row_idx, valid),)
     (AS,) = sweep_lib.sweep_panels(
-        lambda idx: jnp.take(A, idx, axis=0), m, n,
-        [sweep_lib.SketchRightPlan(S, S.s)],
-        block_size=block_size, mesh=mesh)
+        lambda idx: jnp.take(A, idx, axis=0), m, n, [plan],
+        block_size=block_size, mesh=mesh, slab_fn=slab_fn)
     return AS
 
 
 def fast_cur(
-    A: jnp.ndarray,
+    A,
     key: jax.Array,
     c: int,
     r: int,
@@ -98,8 +148,16 @@ def fast_cur(
     temporaries), and the R-side leverage scores via the blocked Gram R Rᵀ
     pass (``column_leverage_scores_gram``) instead of densifying the n×r
     transpose — the path that survives n ≫ 10⁵.  ``mesh`` shards the sweeps.
+
+    ``A`` may also be an implicit ``SPSDOperator`` (kernel CUR): every access
+    goes through the operator protocol — C/R/blocks are gathered panels, and
+    projection sketches stream through ``A.sweep``, where a Pallas-backed
+    ``RBFKernel`` claims them with the fused (sharded) multi-RHS launch.
+    Operators always take the streaming route; A is never densified.
     """
-    m, n = A.shape
+    is_op = isinstance(A, SPSDOperator)
+    streaming = streaming or is_op
+    m, n = _shape_of(A)
     kcr, kc, kr = jax.random.split(key, 3)
     C, R, cidx, ridx = select_cur_sketches(A, kcr, c, r)
 
@@ -122,7 +180,7 @@ def fast_cur(
             Sr = sk.subset_union_sketch(Sr, cidx, n)
         ScC = Sc.left(C)
         RSr = Sr.left(R.T).T
-        blk = jnp.take(jnp.take(A, Sc.indices, axis=0), Sr.indices, axis=1)
+        blk = _block_of(A, Sc.indices, Sr.indices)
         ScASr = blk * (Sc.scales[:, None] * Sr.scales[None, :])
     else:
         Sc = sk.make_sketch(sketch_kind, kc, m, sc)

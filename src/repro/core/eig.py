@@ -43,7 +43,27 @@ def woodbury_solve(C: jnp.ndarray, U: jnp.ndarray, alpha: float,
 
     Implemented in the inverse-free form α U (α I + C^T C U)⁻¹ so singular U is
     fine (matches the Moore–Penrose limit used in the paper's experiments).
+
+    Assumptions, validated up front:
+
+    - ``alpha`` must be a strictly positive finite ridge: the identity
+      divides by α, so α = 0 (or NaN/inf) produces NaN rows silently — an
+      unregularized solve on a rank-deficient C U Cᵀ has no unique solution;
+      use a pseudo-inverse route instead.
+    - ``U`` must be SPSD (the fast/Nyström U matrices are, up to round-off):
+      for indefinite U the inner α I + CᵀC U can be singular and the
+      Woodbury identity itself no longer holds.
+
+    A traced ``alpha`` (jit/vmap/grad over the ridge) cannot be validated at
+    trace time and is passed through unchecked — the caller owns α > 0 there.
     """
+    if not isinstance(alpha, jax.core.Tracer):
+        a = float(alpha)
+        if not (a > 0.0) or a == float("inf"):
+            raise ValueError(
+                f"woodbury_solve: alpha must be a finite positive ridge, "
+                f"got {a!r}; the Woodbury identity divides by alpha and "
+                f"would silently return NaN")
     C32 = C.astype(jnp.float32)
     U32 = U.astype(jnp.float32)
     y32 = y.astype(jnp.float32)

@@ -11,7 +11,14 @@ panels regardless of how ``jax.lax.scan`` re-executes the traced body):
 - ``panels``  : total row panels materialized across those sweeps
 - ``entries`` : kernel entries evaluated (sweeps count nblocks·b·n incl.
                 clamp padding; direct block/columns/diag calls count their
-                exact extent)
+                exact extent).  The fused Pallas routes evaluate the same
+                row extent — per shard, one rectangular slab of
+                ``local_slab_rows`` rows instead of a panel scan — so the
+                count model holds for them unchanged.
+- ``fused_sweeps`` : the subset of ``sweeps`` the inner operator claimed
+                with a fused Pallas launch (single-device multi-RHS or the
+                per-shard slab route); ``last_route`` records the most
+                recent routing decision verbatim
 - ``blocks`` / ``columns`` / ``diags`` / ``fulls`` : direct-access calls
 
 Used by the parity/entry-count tests (fast_model + streaming error must stay
@@ -36,7 +43,9 @@ class CountingOperator(SPSDOperator):
 
     def reset(self):
         self.counts = {"sweeps": 0, "panels": 0, "entries": 0,
+                       "fused_sweeps": 0,
                        "blocks": 0, "columns": 0, "diags": 0, "fulls": 0}
+        self.last_route = None
         self._in_sweep = False
 
     @property
@@ -85,9 +94,16 @@ class CountingOperator(SPSDOperator):
         try:
             # delegate to the inner op so its fast paths (e.g. the fused
             # Pallas multi-RHS launch) stay engaged under instrumentation
-            return self.inner.sweep(plans, block_size=block_size, mesh=mesh)
+            out = self.inner.sweep(plans, block_size=block_size, mesh=mesh)
         finally:
             self._in_sweep = False
+        # attribute the route only on success, so a sweep that raised before
+        # dispatching can never inherit the previous call's routing decision
+        route = getattr(self.inner, "_last_sweep_route", "panel")
+        self.last_route = route
+        if route.startswith("pallas_fused"):
+            self.counts["fused_sweeps"] += 1
+        return out
 
     def map_row_panels(self, fn, block_size: Optional[int] = None):
         self._count_sweep(block_size)

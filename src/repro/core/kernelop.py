@@ -201,29 +201,68 @@ class RBFKernel(SPSDOperator):
             return rbf_ops.rbf_matmat(self.X, V, self.sigma)
         return SPSDOperator.matmat(self, V, block_size, mesh=mesh)
 
-    def sweep(self, plans: Sequence, block_size: Optional[int] = None,
-              mesh=None):
-        """Matmul-shaped sweeps fuse into ONE multi-RHS Pallas launch.
+    def _fused_rhs(self, plans: Sequence):
+        """Dense f32 right-hand sides for a matmul-shaped plan bundle.
 
-        When every plan is a matmat or a column gather (the fast-model
-        bundle: C = K P plus K @ S plus probes), the whole sweep lowers to a
-        single ``rbf_matmat_multi`` call whose kernel tiles are computed once
-        in VMEM and contracted against all right-hand sides before being
-        discarded — no kernel entry is ever evaluated twice or staged in HBM.
         Column gathers ride along as one-hot right-hand sides (exact: each
         output entry is one K entry times 1.0).
         """
-        if self.use_pallas and sweep_lib.mesh_data_size(mesh) <= 1 and plans \
-                and all(isinstance(p, (sweep_lib.MatmulPlan,
-                                       sweep_lib.ColumnGatherPlan))
-                        for p in plans):
+        n = self.n
+        return tuple(
+            p.V.astype(jnp.float32) if isinstance(p, sweep_lib.MatmulPlan)
+            else jax.nn.one_hot(p.col_idx, n, dtype=jnp.float32).T
+            for p in plans)
+
+    def sweep(self, plans: Sequence, block_size: Optional[int] = None,
+              mesh=None):
+        """Matmul-shaped sweeps fuse into ONE multi-RHS Pallas launch per
+        device.
+
+        When every plan is a matmat or a column gather (the fast-model
+        bundle: C = K P plus K @ S plus probes), the whole sweep lowers to
+        ``rbf_matmat_multi`` calls whose kernel tiles are computed once in
+        VMEM and contracted against all right-hand sides before being
+        discarded — no kernel entry is ever evaluated twice or staged in HBM.
+        On a trivial mesh that is one square launch; on a non-trivial mesh
+        the bundle is *claimed per shard* through the sweep engine's
+        ``slab_fn`` hook: each device gathers its contiguous local row slab
+        and runs one rectangular ``rbf_matmat_multi_rows`` launch, with the
+        partial carries psum-reduced exactly like the panel route.  The
+        route taken is recorded on ``self._last_sweep_route``
+        ('pallas_fused' | 'pallas_fused_sharded' | 'panel') so
+        instrumentation can assert the fast path stays engaged.
+        """
+        plans = list(plans)
+        fused = self.use_pallas and plans and all(
+            isinstance(p, (sweep_lib.MatmulPlan, sweep_lib.ColumnGatherPlan))
+            for p in plans)
+        if fused and sweep_lib.mesh_data_size(mesh) <= 1:
+            self._last_sweep_route = "pallas_fused"
+            from repro.kernels.rbf_sketch import ops as rbf_ops
+            return list(rbf_ops.rbf_matmat_multi(self.X,
+                                                 self._fused_rhs(plans),
+                                                 self.sigma))
+        if fused:
+            self._last_sweep_route = "pallas_fused_sharded"
             from repro.kernels.rbf_sketch import ops as rbf_ops
             n = self.n
-            Vs = [p.V.astype(jnp.float32) if isinstance(p, sweep_lib.MatmulPlan)
-                  else jax.nn.one_hot(p.col_idx, n, dtype=jnp.float32).T
-                  for p in plans]
-            return list(rbf_ops.rbf_matmat_multi(self.X, tuple(Vs),
-                                                 self.sigma))
+            Vs = self._fused_rhs(plans)
+
+            def slab_fn(row_idx, valid):
+                # One rectangular launch for this shard's row slab: only the
+                # slab's kernel tiles are evaluated, each exactly once.
+                Xr = jnp.take(self.X, row_idx, axis=0)
+                outs = rbf_ops.rbf_matmat_multi_rows(Xr, self.X, Vs,
+                                                     self.sigma)
+                v = valid.astype(jnp.float32)[:, None]
+                return tuple(p.init(n, n).at[row_idx].add(o * v)
+                             for p, o in zip(plans, outs))
+
+            # panel_fn=None: the claim is unconditional, the scan never runs
+            return sweep_lib.sweep_panels(
+                None, n, n, plans,
+                block_size=block_size, mesh=mesh, slab_fn=slab_fn)
+        self._last_sweep_route = "panel"
         return SPSDOperator.sweep(self, plans, block_size, mesh=mesh)
 
 

@@ -68,6 +68,15 @@ def uniform_column_sketch(key: jax.Array, n: int, s: int,
 
     ``mask`` (n,) restricts sampling to valid rows of a padded operator
     (p_i = 1/n_valid on the mask, 0 elsewhere) — see ``MaskedSketch``.
+
+    When ``s`` exceeds the number of valid rows, sampling without replacement
+    is impossible and ``jax.random.choice(replace=False, p=...)`` silently
+    falls back to zero-weight entries — junk padding columns of K would enter
+    the sketch.  A concrete mask raises ``ValueError`` instead; a traced mask
+    (vmapped ragged batches, where the overflow may affect only some batch
+    items) clamps the overflowing picks back onto valid rows (sampled with
+    replacement), so the sketch degenerates to duplicated valid columns but
+    never observes padding.
     """
     if mask is None:
         idx = jax.random.choice(key, n, shape=(s,), replace=False)
@@ -75,9 +84,23 @@ def uniform_column_sketch(key: jax.Array, n: int, s: int,
                       dtype=jnp.float32)
     else:
         m = mask.astype(jnp.float32)
-        idx = jax.random.choice(key, n, shape=(s,), replace=False,
-                                p=m / jnp.sum(m))
-        one = jnp.sqrt(jnp.sum(m) / s) if scale else jnp.float32(1.0)
+        nv = jnp.sum(m)
+        traced = isinstance(nv, jax.core.Tracer)
+        if not traced and int(nv) < s:
+            raise ValueError(
+                f"uniform_column_sketch: s={s} exceeds the {int(nv)} valid "
+                f"rows of the mask; sampling without replacement would pull "
+                f"in padding rows")
+        p = m / nv
+        idx = jax.random.choice(key, n, shape=(s,), replace=False, p=p)
+        if traced:
+            # traced-mask overflow guard (the raise above already proved a
+            # concrete mask cannot overflow): remap any zero-weight pick onto
+            # a valid row (categorical sampling never selects zero-prob ones)
+            repl = jax.random.choice(jax.random.fold_in(key, 1), n,
+                                     shape=(s,), replace=True, p=p)
+            idx = jnp.where(jnp.take(m, idx) > 0, idx, repl)
+        one = jnp.sqrt(nv / s) if scale else jnp.float32(1.0)
         sc = jnp.full((s,), 1.0, jnp.float32) * one
     return ColumnSketch(idx, sc, n)
 

@@ -439,7 +439,12 @@ def error_vs_best_rank_k(K, approx: SPSDApprox, k: int, method: str = "auto",
     if method == "dense":
         Kd = Kop.full().astype(jnp.float32)
         evals = jnp.linalg.eigvalsh(Kd)
+        # A kernel of rank ≤ k has an exactly-zero tail; floor it the same
+        # way the streaming branch does (1e-12·||K||_F²) so the ratio stays
+        # finite instead of inf/nan.
+        fro2 = jnp.sum(evals ** 2)
         tail = jnp.sum(jnp.sort(evals ** 2)[: Kd.shape[0] - k])
+        tail = jnp.maximum(tail, 1e-12 * fro2)
         R = Kd - approx.dense().astype(jnp.float32)
         return jnp.sum(R * R) / tail
     key = jax.random.PRNGKey(0) if key is None else key

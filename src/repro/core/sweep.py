@@ -79,6 +79,21 @@ def num_panels(nrows: int, ncols: int, block_size: Optional[int],
                                            data_parallel))
 
 
+def local_slab_rows(nrows: int, ncols: int, block_size: Optional[int],
+                    data_parallel: int = 1) -> int:
+    """Rows of the per-device slab a sharded sweep covers (panels · b).
+
+    This is the height a ``slab_fn`` claim is invoked with on each shard —
+    the contiguous local row range, including the ≤ one thin panel of clamp /
+    sentinel padding the panel route would also evaluate.
+    """
+    bs = resolved_block_size(nrows, ncols, block_size, data_parallel)
+    nblocks = -(-nrows // bs)
+    if data_parallel > 1:
+        nblocks += (-nblocks) % data_parallel
+    return (nblocks // data_parallel) * bs
+
+
 # ---------------------------------------------------------------------------
 # plans
 # ---------------------------------------------------------------------------
@@ -349,17 +364,31 @@ def mesh_data_size(mesh: Optional[Mesh]) -> int:
 
 def sweep_panels(panel_fn, nrows: int, ncols: int, plans: Sequence,
                  block_size: Optional[int] = None,
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 slab_fn=None):
     """Apply every plan to each (b × ncols) row panel in a single pass.
 
     ``panel_fn(idx)`` materializes rows ``idx`` (a (b,) int array; tail panels
     are clamped to the last row and masked via ``valid``).  Returns
-    ``[plan.finalize(carry) for plan in plans]``.
+    ``[plan.finalize(carry) for plan in plans]``.  ``panel_fn`` may be None
+    when ``slab_fn`` is provided (an unconditional claim — the panel scan is
+    then unreachable).
 
     With a non-trivial ``mesh`` the panel starts are partitioned over the
     mesh's data axes via ``shard_map``; each device scans its local panels and
     the additive carries are ``psum``-reduced, so results match the
     single-device sweep to float-reassociation accuracy.
+
+    ``slab_fn`` is the per-shard fast-path hook: an operator that can produce
+    a whole contiguous row slab's worth of carries in one shot (e.g. the
+    fused multi-RHS Pallas launch of ``RBFKernel``) claims the plan bundle by
+    passing ``slab_fn(row_idx, valid) -> tuple(carry per plan)``.  ``row_idx``
+    is the shard's full local row range — ``local_slab_rows`` rows, clamped
+    into ``[0, nrows)`` with ``valid`` masking clamp/sentinel padding — and
+    the returned carries must equal what the panel scan would have produced
+    (row-indexed outputs scatter-added into ``plan.init`` zeros, masked by
+    ``valid``).  The psum reduction and finalize step are shared with the
+    panel route, so a claim changes the schedule, never the contract.
     """
     plans = list(plans)
     dp = mesh_data_size(mesh)
@@ -379,6 +408,17 @@ def sweep_panels(panel_fn, nrows: int, ncols: int, plans: Sequence,
         carry, _ = jax.lax.scan(body, init, starts)
         return carry
 
+    def local_carry(starts_local, npanels_local):
+        if slab_fn is None:
+            return local_sweep(starts_local)
+        # starts are contiguous ascending multiples of bs (sentinels == nrows
+        # sort last), so the shard's panels tile exactly the row range
+        # [starts_local[0], starts_local[0] + npanels_local·bs) ∩ [0, nrows).
+        idx = starts_local[0] + jnp.arange(npanels_local * bs)
+        valid = idx < nrows
+        idx = jnp.clip(idx, 0, nrows - 1)
+        return tuple(slab_fn(idx, valid))
+
     starts = jnp.arange(nblocks) * bs
     if dp > 1:
         axes = _mesh_data_axes(mesh)
@@ -390,9 +430,10 @@ def sweep_panels(panel_fn, nrows: int, ncols: int, plans: Sequence,
         if pad:
             starts = jnp.concatenate(
                 [starts, jnp.full((pad,), nrows, starts.dtype)])
+        per_dev = starts.shape[0] // dp
 
         def sharded(starts_local):
-            carry = local_sweep(starts_local)
+            carry = local_carry(starts_local, per_dev)
             return jax.tree_util.tree_map(
                 lambda x: jax.lax.psum(x, axes), carry)
 
@@ -400,5 +441,5 @@ def sweep_panels(panel_fn, nrows: int, ncols: int, plans: Sequence,
                            in_specs=P(axes), out_specs=P(),
                            check_rep=False)(starts)
     else:
-        carry = local_sweep(starts)
+        carry = local_carry(starts, nblocks)
     return [p.finalize(c) for p, c in zip(plans, carry)]

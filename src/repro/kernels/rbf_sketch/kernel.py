@@ -121,7 +121,15 @@ def _rbf_matmat_multi_kernel(xr_ref, xc_ref, *refs, gamma: float, nv: int):
 
 def rbf_matmat_multi_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs,
                             sigma: float, interpret: bool = False):
-    """[K(Xr, Xc) @ V for V in Vs] over padded inputs, one kernel launch."""
+    """[K(Xr, Xc) @ V for V in Vs] over padded inputs, one kernel launch.
+
+    ``Xr`` and ``Xc`` may differ: the grid is rectangular
+    (nr/BLOCK_R × nc/BLOCK_C), which is how the shard_map sweep fast path
+    launches one row *slab* per device — ``Xr`` is the device's contiguous
+    row range of the point set (a row-offset slice), ``Xc`` the full set, so
+    each device computes only its slab's kernel tiles in VMEM and contracts
+    them against every right-hand side exactly once.
+    """
     nr, d = Xr.shape
     nc = Xc.shape[0]
     assert nr % BLOCK_R == 0 and nc % BLOCK_C == 0, (nr, nc)

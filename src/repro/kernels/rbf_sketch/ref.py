@@ -27,6 +27,12 @@ def rbf_matmat_multi(X: jnp.ndarray, Vs, sigma: float):
     return tuple(K @ V.astype(jnp.float32) for V in Vs)
 
 
+def rbf_matmat_multi_rows(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs, sigma: float):
+    """Rectangular row-slab oracle: [K(Xr, Xc) @ V for V in Vs]."""
+    K = rbf_block(Xr, Xc, sigma)
+    return tuple(K @ V.astype(jnp.float32) for V in Vs)
+
+
 def sketched_gram(Xs: jnp.ndarray, sigma: float,
                   scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """S^T K S for a column-selection sketch: rows Xs = X[S.indices]."""

@@ -1,0 +1,187 @@
+"""PR-3 satellite regression tests.
+
+Each test here fails on the pre-PR code:
+
+- ``error_vs_best_rank_k(method="dense")`` divided by an unguarded zero tail
+  for kernels of rank ≤ k (inf/nan), while the streaming branch floored it.
+- ``uniform_column_sketch(mask=...)`` silently sampled zero-weight padding
+  rows whenever ``s`` exceeded the number of valid rows.
+- ``woodbury_solve`` returned silent NaN at ``alpha = 0``.
+- ``rbf_sketch.ops`` captured the backend's interpret-mode decision at import
+  time (module constant ``_INTERPRET``) instead of per call.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketch as sk
+from repro.core import spsd
+from repro.core.eig import woodbury_solve
+
+
+# ---------------------------------------------------------------------------
+# error_vs_best_rank_k: rank-deficient dense branch
+# ---------------------------------------------------------------------------
+
+def test_error_vs_best_rank_k_dense_rank_deficient_is_finite():
+    """rank(K) = 3 ≤ k = 5 -> the exact tail is 0 (a diagonal K keeps
+    eigvalsh exact, so pre-PR this divided 0/0 or x/0 -> inf/nan); the
+    floored ratio must stay finite."""
+    K = jnp.diag(jnp.asarray([5.0, 3.0, 2.0] + [0.0] * 97, jnp.float32))
+    ap = spsd.fast_model(K, jax.random.PRNGKey(0), c=8, s=24,
+                         s_sketch="gaussian")
+    rho = float(spsd.error_vs_best_rank_k(K, ap, k=5, method="dense"))
+    assert np.isfinite(rho) and rho >= 0.0
+
+
+def test_error_vs_best_rank_k_dense_floor_matches_streaming_branch():
+    """Dense and blocked branches use the same 1e-12·||K||_F² floor, so a
+    rank-deficient kernel gives finite ratios on both."""
+    rng = np.random.default_rng(1)
+    B = rng.normal(size=(120, 4)).astype(np.float32)
+    K = jnp.asarray(B @ B.T)
+    ap = spsd.fast_model(K, jax.random.PRNGKey(1), c=8, s=24,
+                         s_sketch="gaussian")
+    dense = float(spsd.error_vs_best_rank_k(K, ap, k=6, method="dense"))
+    blocked = float(spsd.error_vs_best_rank_k(K, ap, k=6, method="blocked"))
+    assert np.isfinite(dense) and np.isfinite(blocked)
+
+
+def test_error_vs_best_rank_k_dense_full_rank_unchanged():
+    """The floor must not perturb the well-conditioned case."""
+    rng = np.random.default_rng(2)
+    B = rng.normal(size=(80, 80)).astype(np.float32)
+    K = jnp.asarray(B @ B.T + 80 * np.eye(80, dtype=np.float32))
+    ap = spsd.fast_model(K, jax.random.PRNGKey(2), c=20, s=50,
+                         s_sketch="gaussian")
+    Kd = np.asarray(K, np.float32)
+    evals = np.linalg.eigvalsh(Kd)
+    tail = float(np.sort(evals ** 2)[: 80 - 10].sum())
+    resid = Kd - np.asarray(ap.dense(), np.float32)
+    ref = float((resid ** 2).sum()) / tail
+    got = float(spsd.error_vs_best_rank_k(K, ap, k=10, method="dense"))
+    assert got == pytest.approx(ref, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# uniform_column_sketch masked overflow
+# ---------------------------------------------------------------------------
+
+def test_masked_uniform_sketch_overflow_raises_on_concrete_mask():
+    mask = (jnp.arange(50) < 10).astype(jnp.float32)
+    with pytest.raises(ValueError, match="valid rows"):
+        sk.uniform_column_sketch(jax.random.PRNGKey(0), 50, 20, mask=mask)
+
+
+def test_masked_uniform_sketch_overflow_clamps_under_trace():
+    """Traced masks (vmapped ragged batches) cannot raise; every sampled
+    index must still land on a valid row (pre-PR: zero-weight padding rows
+    leaked in)."""
+    n, s, nv = 50, 20, 10
+
+    @jax.jit
+    def sample(mask):
+        return sk.uniform_column_sketch(jax.random.PRNGKey(0), n, s,
+                                        mask=mask).indices
+
+    mask = (jnp.arange(n) < nv).astype(jnp.float32)
+    idx = np.asarray(sample(mask))
+    assert idx.shape == (s,)
+    assert np.all(idx < nv), f"padding rows sampled: {idx}"
+
+
+def test_masked_uniform_sketch_no_overflow_stays_valid_and_distinct():
+    n, s, nv = 60, 8, 30
+    mask = (jnp.arange(n) < nv).astype(jnp.float32)
+    S = sk.uniform_column_sketch(jax.random.PRNGKey(3), n, s, mask=mask)
+    idx = np.asarray(S.indices)
+    assert np.all(idx < nv)
+    assert len(np.unique(idx)) == s          # still without replacement
+
+
+def test_fast_model_batched_ragged_uniform_overflow():
+    """Ragged batch where s exceeds one item's valid rows: the uniform
+    column-selection sketch must degrade to duplicated valid rows, never
+    poisoned padding (pre-PR: junk columns of K entered Sᵀ K S)."""
+    from repro.core.kernelop import RBFKernel
+    rng = np.random.default_rng(4)
+    n_valid = np.array([30, 200])
+    npad = 200
+    Xb = rng.normal(size=(2, npad, 6))
+    for b, nv in enumerate(n_valid):
+        Xb[b, nv:] = 99.0                    # poison the padding rows
+    Xb = jnp.asarray(Xb, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    bat = spsd.fast_model_batched(RBFKernel(Xb, sigma=1.5), keys, c=12, s=48,
+                                  s_sketch="uniform",
+                                  n_valid=jnp.asarray(n_valid))
+    assert np.all(np.isfinite(np.asarray(bat.U)))
+    for b, nv in enumerate(n_valid):
+        Ktrue = RBFKernel(Xb[b, :nv], sigma=1.5)
+        ap = spsd.SPSDApprox(C=bat.C[b][:nv], U=bat.U[b])
+        err = float(spsd.relative_error(Ktrue, ap, method="dense"))
+        assert np.isfinite(err) and err < 0.5, (b, err)
+
+
+# ---------------------------------------------------------------------------
+# woodbury_solve alpha validation
+# ---------------------------------------------------------------------------
+
+def _cuy(seed=6, n=40, c=5):
+    rng = np.random.default_rng(seed)
+    C = jnp.asarray(rng.normal(size=(n, c)), jnp.float32)
+    G = rng.normal(size=(c, c)).astype(np.float32)
+    U = jnp.asarray(G @ G.T)
+    y = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    return C, U, y
+
+
+@pytest.mark.parametrize("alpha", [0.0, -1.0, float("nan"), float("inf")])
+def test_woodbury_solve_rejects_invalid_alpha(alpha):
+    C, U, y = _cuy()
+    with pytest.raises(ValueError, match="alpha"):
+        woodbury_solve(C, U, alpha, y)
+
+
+def test_woodbury_solve_traced_alpha_passes_through():
+    """jit/vmap over the ridge cannot be validated at trace time and must
+    keep working (the guard only fires for concrete alpha)."""
+    C, U, y = _cuy()
+    eager = np.asarray(woodbury_solve(C, U, 0.25, y))
+    traced = np.asarray(jax.jit(lambda a: woodbury_solve(C, U, a, y))(0.25))
+    np.testing.assert_allclose(traced, eager, rtol=1e-5, atol=1e-6)
+
+
+def test_woodbury_solve_valid_alpha_matches_dense():
+    C, U, y = _cuy()
+    alpha = 0.37
+    w = np.asarray(woodbury_solve(C, U, alpha, y), np.float64)
+    A = np.asarray(C, np.float64) @ np.asarray(U, np.float64) \
+        @ np.asarray(C, np.float64).T + alpha * np.eye(C.shape[0])
+    ref = np.linalg.solve(A, np.asarray(y, np.float64))
+    np.testing.assert_allclose(w, ref, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# call-time backend resolution in rbf_sketch.ops
+# ---------------------------------------------------------------------------
+
+def test_interpret_mode_resolved_at_call_time(monkeypatch):
+    """Backend selection must be consulted per call, not frozen at import
+    (pre-PR: a module-level ``_INTERPRET`` constant)."""
+    from repro.kernels.rbf_sketch import ops
+
+    assert not hasattr(ops, "_INTERPRET")
+    calls = []
+    real = ops._interpret_mode
+    monkeypatch.setattr(ops, "_interpret_mode",
+                        lambda: (calls.append(1), real())[1])
+
+    X = jax.random.normal(jax.random.PRNGKey(0), (20, 4))
+    V = jax.random.normal(jax.random.PRNGKey(1), (20, 3))
+    ops.rbf_block(X, X, 1.1)
+    ops.rbf_matmat(X, V, 1.1)
+    ops.rbf_matmat_multi(X, (V,), 1.1)
+    ops.sketched_gram(X[:8], 1.1)
+    assert len(calls) == 4

@@ -178,6 +178,36 @@ def test_pallas_sweep_fast_path_matches_generic():
                                rtol=1e-5, atol=1e-5)
 
 
+def test_sweep_route_recorder_single_device():
+    """RBFKernel records which route a sweep took; CountingOperator meters it."""
+    Kc = CountingOperator(_rbf(20, use_pallas=True))
+    V = jax.random.normal(jax.random.PRNGKey(4), (Kc.n, 3), jnp.float32)
+    Kc.sweep([sw.MatmulPlan(V)])
+    assert Kc.last_route == "pallas_fused"
+    assert Kc.counts["fused_sweeps"] == 1
+    Kc.sweep([sw.MatmulPlan(V), sw.FrobeniusPlan()])   # not matmul-shaped
+    assert Kc.last_route == "panel"
+    assert Kc.counts["fused_sweeps"] == 1 and Kc.counts["sweeps"] == 2
+
+
+def test_slab_hook_single_device_matches_scan():
+    """The engine's slab_fn hook (claimed row slabs) equals the panel scan."""
+    Kop = _rbf(21, n=217)
+    Kd = np.asarray(Kop.full(), np.float32)
+    V = jax.random.normal(jax.random.PRNGKey(5), (217, 4), jnp.float32)
+    plan = sw.MatmulPlan(V)
+    cols = jnp.arange(217)
+
+    def slab_fn(row_idx, valid):
+        panel = Kop.block(row_idx, cols)
+        return (plan.update(plan.init(217, 217), panel, row_idx, valid),)
+
+    (got,) = sw.sweep_panels(lambda idx: Kop.block(idx, cols), 217, 217,
+                             [plan], block_size=64, slab_fn=slab_fn)
+    np.testing.assert_allclose(np.asarray(got), Kd @ np.asarray(V),
+                               rtol=2e-4, atol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # padding masks (ragged batches)
 # ---------------------------------------------------------------------------
@@ -263,3 +293,23 @@ def test_fast_cur_streaming_leverage_runs():
     e_d = float(cur.relative_error(A, ap_d))
     assert np.isfinite(e_s) and np.isfinite(e_d)
     assert abs(e_s - e_d) < 0.25
+
+
+def test_fast_cur_on_implicit_operator_matches_dense_route():
+    """Kernel CUR through the operator protocol: same keys as the dense
+    route -> same C/R panels, no densification, fused Pallas sweep."""
+    Kp = _rbf(15, n=260, use_pallas=True)
+    Kd = jnp.asarray(np.asarray(_rbf(15, n=260).full(), np.float32))
+    kw = dict(c=12, r=12, sc=48, sr=48, sketch_kind="gaussian")
+    Kc = CountingOperator(Kp)
+    ap_o = cur.fast_cur(Kc, jax.random.PRNGKey(3), **kw)
+    assert Kc.counts["fulls"] == 0                  # never densified
+    assert Kc.counts["fused_sweeps"] == 1           # A S_R claimed by Pallas
+    ap_d = cur.fast_cur(Kd, jax.random.PRNGKey(3), streaming=True, **kw)
+    np.testing.assert_allclose(np.asarray(ap_o.C), np.asarray(ap_d.C),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ap_o.R), np.asarray(ap_d.R),
+                               rtol=1e-4, atol=1e-4)
+    e_o = float(cur.relative_error(Kd, ap_o))
+    e_d = float(cur.relative_error(Kd, ap_d))
+    assert np.isfinite(e_o) and abs(e_o - e_d) < 0.1

@@ -11,9 +11,10 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
-from repro.core import spsd
+from repro.core import cur, spsd
 from repro.core import sweep as sw
 from repro.core.adaptive import uniform_adaptive2_indices
+from repro.core.instrument import CountingOperator
 from repro.core.kernelop import RBFKernel
 from repro.core.sweep import mesh_data_size
 
@@ -26,11 +27,11 @@ def _mesh():
     return Mesh(np.asarray(jax.devices()), ("data",))
 
 
-def _rbf(seed, n=533, d=8, sigma=2.0):
+def _rbf(seed, n=533, d=8, sigma=2.0, **kw):
     rng = np.random.default_rng(seed)
     centers = rng.normal(size=(8, d)) * 2.5
     X = centers[rng.integers(0, 8, size=n)] + rng.normal(size=(n, d)) * 0.4
-    return RBFKernel(jnp.asarray(X, jnp.float32), sigma=sigma)
+    return RBFKernel(jnp.asarray(X, jnp.float32), sigma=sigma, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +114,131 @@ def test_sharded_fused_model_with_error_matches_local():
     np.testing.assert_allclose(np.asarray(ap_s.U), np.asarray(ap_l.U),
                                rtol=1e-4, atol=1e-4)
     assert float(e_s) == pytest.approx(float(e_l), abs=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused shard_map × Pallas route (the PR-3 tentpole)
+# ---------------------------------------------------------------------------
+
+@multidevice
+@pytest.mark.parametrize("n", [533, 512])    # panel-count not/divisible by 8
+def test_sharded_pallas_sweep_stays_fused_and_matches_sequential(n):
+    """Matmul-shaped sweeps on a non-trivial mesh must dispatch the fused
+    multi-RHS Pallas slab launch per shard (not the panel fallback) and
+    match the sequential sweep to ≤ 1e-5."""
+    Kc = CountingOperator(_rbf(6, n=n, use_pallas=True))
+    Kg = _rbf(6, n=n)                         # same points, jnp route
+    V = jax.random.normal(jax.random.PRNGKey(4), (n, 6), jnp.float32)
+    cidx = jnp.asarray([0, n // 3, n - 1])
+    plans = lambda: [sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx)]
+    got = Kc.sweep(plans(), mesh=_mesh())
+    # routing assertion: the Pallas fast path stayed engaged under shard_map
+    assert Kc.last_route == "pallas_fused_sharded"
+    assert Kc.counts["fused_sweeps"] == 1 and Kc.counts["sweeps"] == 1
+    ref = Kg.sweep(plans(), block_size=64)    # sequential panel sweep
+    for a, b in zip(got, ref):
+        assert a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@multidevice
+@pytest.mark.parametrize("n", [533, 512])
+def test_sharded_pallas_entry_counts_within_one_thin_panel(n):
+    """The sharded fused route's metered entry count must stay within one
+    thin panel (per the rebalanced block size) of the sequential sweep's."""
+    V = jax.random.normal(jax.random.PRNGKey(5), (n, 4), jnp.float32)
+    dp = len(jax.devices())
+
+    K_seq = CountingOperator(_rbf(7, n=n, use_pallas=True))
+    K_seq.sweep([sw.MatmulPlan(V)])
+    K_shd = CountingOperator(_rbf(7, n=n, use_pallas=True))
+    K_shd.sweep([sw.MatmulPlan(V)], mesh=_mesh())
+    assert K_shd.last_route == "pallas_fused_sharded"
+
+    bs_seq = sw.resolved_block_size(n, n, None)
+    bs_shd = sw.resolved_block_size(n, n, None, dp)
+    one_panel = max(bs_seq, bs_shd) * n
+    assert abs(K_shd.counts["entries"] - K_seq.counts["entries"]) <= one_panel
+    # and the per-shard slab model agrees with the panel model exactly
+    assert K_shd.counts["entries"] == dp * sw.local_slab_rows(n, n, None, dp) * n
+
+
+@multidevice
+def test_sharded_pallas_fast_model_matches_sequential():
+    """RBFKernel(use_pallas=True).sweep via fast_model on the 8-device mesh:
+    fused route engaged, results ≤ 1e-5 from the sequential sweep."""
+    Kc = CountingOperator(_rbf(8, use_pallas=True))
+    key = jax.random.PRNGKey(0)
+    ap_s = spsd.fast_model(Kc, key, c=20, s=80, s_sketch="gaussian",
+                           streaming=True, mesh=_mesh())
+    assert Kc.counts["fused_sweeps"] == 1
+    assert Kc.last_route == "pallas_fused_sharded"
+    ap_l = spsd.fast_model(_rbf(8), key, c=20, s=80, s_sketch="gaussian",
+                           streaming=True)
+    np.testing.assert_allclose(np.asarray(ap_s.C), np.asarray(ap_l.C),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ap_s.U), np.asarray(ap_l.U),
+                               rtol=1e-4, atol=1e-4)
+
+
+@multidevice
+def test_sharded_pallas_matmat_routes_through_fused_sweep():
+    Kc = CountingOperator(_rbf(9, use_pallas=True))
+    V = jax.random.normal(jax.random.PRNGKey(6), (Kc.n, 5), jnp.float32)
+    got = Kc.matmat(V, mesh=_mesh())
+    assert Kc.last_route == "pallas_fused_sharded"
+    ref = _rbf(9).matmat(V, block_size=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@multidevice
+def test_sharded_kernel_cur_uses_fused_route():
+    """fast_cur on an implicit kernel operator: the projection sketches
+    stream through the operator sweep and claim the fused sharded launch."""
+    Kc = CountingOperator(_rbf(10, n=300, use_pallas=True))
+    kw = dict(c=12, r=12, sc=48, sr=48, sketch_kind="gaussian")
+    ap = cur.fast_cur(Kc, jax.random.PRNGKey(3), mesh=_mesh(), **kw)
+    assert Kc.counts["fused_sweeps"] >= 1
+    assert Kc.last_route == "pallas_fused_sharded"
+    # same key through the dense route -> same selections, same error regime
+    Kd = jnp.asarray(np.asarray(_rbf(10, n=300).full(), np.float32))
+    ap_d = cur.fast_cur(Kd, jax.random.PRNGKey(3), streaming=True, **kw)
+    err = float(cur.relative_error(Kd, ap))
+    err_d = float(cur.relative_error(Kd, ap_d))
+    assert np.isfinite(err) and abs(err - err_d) < 0.05
+
+
+@multidevice
+def test_sharded_dense_right_sketch_slab_claim_matches_panel_route():
+    """CUR's rectangular A S sweep: the per-shard slab claim must equal the
+    sequential panel route bit-for-bit-tolerance on a rectangular A."""
+    from repro.core import sketch as sk
+    rng = np.random.default_rng(15)
+    A = jnp.asarray(rng.normal(size=(413, 170)), jnp.float32)
+    for kind in ("srht", "countsketch"):
+        S = sk.make_sketch(kind, jax.random.PRNGKey(4), 170, 48)
+        ref = cur.blocked_right_sketch(A, S, block_size=64)
+        got = cur.blocked_right_sketch(A, S, block_size=64, mesh=_mesh())
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@multidevice
+def test_sharded_pallas_non_matmul_plans_fall_back_to_panels():
+    """A bundle with a non-matmul plan must NOT be claimed — the panel route
+    runs (and still matches) so correctness never depends on the claim."""
+    Kc = CountingOperator(_rbf(11, use_pallas=True))
+    plans = lambda: [sw.MatmulPlan(jax.random.normal(jax.random.PRNGKey(7),
+                                                     (Kc.n, 3), jnp.float32)),
+                     sw.FrobeniusPlan()]
+    got = Kc.sweep(plans(), block_size=64, mesh=_mesh())
+    assert Kc.last_route == "panel" and Kc.counts["fused_sweeps"] == 0
+    ref = _rbf(11).sweep(plans(), block_size=64)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                               rtol=1e-4, atol=1e-4)
+    assert float(got[1]) == pytest.approx(float(ref[1]), rel=1e-4)
 
 
 @multidevice
