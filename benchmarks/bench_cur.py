@@ -59,7 +59,7 @@ def run(c=100, r=100, seed=0):
         f = cur.fast_cur(A, key, c=c, r=r, sc=mult * r, sr=mult * c,
                          sketch_kind="uniform")
         dt = time.perf_counter() - t0
-        rows.append((f"fast U (Eq.9)", f"sc={mult}r, sr={mult}c",
+        rows.append(("fast U (Eq.9)", f"sc={mult}r, sr={mult}c",
                      f"{dt * 1e3:9.1f}",
                      f"{float(cur.relative_error(A, f)):.5f}"))
 

@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from benchmarks.common import make_dataset, print_table
 from repro.core import spsd

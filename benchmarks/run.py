@@ -9,33 +9,55 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
 SUITES = ["spsd_error", "spsd_error_adaptive", "kpca", "spectral", "cur",
-          "time", "landmark", "ablations"]
+          "time", "landmark", "ablations", "kernels"]
 
 SMOKE_JSON = os.path.join("results", "BENCH_smoke.json")
 
 # The per-PR tracked copy at the repo root: results/BENCH_smoke.json is
-# gitignored (CI-artifact only), so every smoke run also refreshes this file
-# and commits carry the measured trajectory in-tree.
+# gitignored (CI-artifact only), so every smoke run also refreshes a
+# ``BENCH_<tag>.json`` file and commits carry the measured trajectory
+# in-tree.  The tag defaults to the short git revision; PRs pass an explicit
+# ``--tag prN`` when refreshing the tracked copy they commit.
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-TRACKED_JSON = os.path.join(REPO_ROOT, "BENCH_pr3.json")
 
 
-def smoke(out: str = SMOKE_JSON) -> int:
+def default_tag() -> str:
+    """Short git revision of the repo, or 'local' outside a checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, cwd=REPO_ROOT,
+                             timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "local"
+
+
+def tracked_json_path(tag: str) -> str:
+    return os.path.join(REPO_ROOT, f"BENCH_{tag}.json")
+
+
+def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
     """Tiny-shape pass over every perf entry point, CI-sized (~1 min CPU).
 
     Exercises the argument plumbing and the streaming code paths so the
     benchmark suite cannot bit-rot, and writes ``results/BENCH_smoke.json``
-    (per-step wall time + the fused-vs-separate scaling rows) so CI can
-    archive the perf trajectory per PR.  Absolute numbers at these shapes
-    are noise; trends and the speedup ratio are the signal.
+    (per-step wall time, the fused-vs-separate scaling rows, and the
+    per-kernel registry rows) so CI can archive the perf trajectory per PR.
+    A tracked ``BENCH_<tag>.json`` copy lands at the repo root (tag from
+    ``--tag``, default the short git revision).  Absolute numbers at these
+    shapes are noise; trends and the speedup ratio are the signal.
     """
     import jax
     t0 = time.time()
-    from benchmarks import bench_cur, bench_spsd_error, bench_time
+    from benchmarks import bench_cur, bench_kernels, bench_spsd_error, \
+        bench_time
     steps = {}
 
     def step(name, fn):
@@ -55,6 +77,7 @@ def smoke(out: str = SMOKE_JSON) -> int:
     step("time_streaming",
          lambda: bench_time.main(["--ns", "400", "800", "--streaming"]))
     step("cur", lambda: bench_cur.main([]))
+    kernels = step("kernels", lambda: bench_kernels.run())
 
     payload = {
         "total_seconds": round(time.time() - t0, 3),
@@ -63,17 +86,19 @@ def smoke(out: str = SMOKE_JSON) -> int:
         "device_count": jax.device_count(),
         "steps_seconds": steps,
         "scaling": scaling,
+        "kernels": kernels,
     }
     out_dir = os.path.dirname(out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
-    with open(TRACKED_JSON, "w") as f:       # tracked copy at the repo root
+    tracked = tracked_json_path(tag or default_tag())
+    with open(tracked, "w") as f:            # tracked copy at the repo root
         json.dump(payload, f, indent=2)
         f.write("\n")
     print(f"\nsmoke benchmarks completed in {payload['total_seconds']:.1f}s "
-          f"-> {out} (tracked copy: {TRACKED_JSON})")
+          f"-> {out} (tracked copy: {tracked})")
     return 0
 
 
@@ -85,9 +110,12 @@ def main(argv=None):
                    help="tiny-shape CI pass over the perf entry points")
     p.add_argument("--smoke-out", default=SMOKE_JSON,
                    help="where --smoke writes its JSON summary")
+    p.add_argument("--tag", default=None,
+                   help="tag for the tracked repo-root BENCH_<tag>.json copy "
+                        "(default: short git revision)")
     args = p.parse_args(argv)
     if args.smoke:
-        return smoke(args.smoke_out)
+        return smoke(args.smoke_out, tag=args.tag)
     picked = args.only or SUITES
 
     t0 = time.time()
@@ -117,6 +145,9 @@ def main(argv=None):
     if "ablations" in picked:
         from benchmarks import bench_ablations
         bench_ablations.main([])
+    if "kernels" in picked:
+        from benchmarks import bench_kernels
+        bench_kernels.main([])
     print(f"\nbenchmarks completed in {time.time() - t0:.1f}s")
     return 0
 

@@ -11,7 +11,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke
 from repro.core import cur

@@ -14,6 +14,7 @@ sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
 import jax
 import jax.numpy as jnp
 import numpy as np
+from numpy.random import default_rng
 
 from repro.core import eig, spsd
 from repro.core.kernelop import RBFKernel
@@ -60,7 +61,6 @@ print(f"KPCA(+fast) 10-NN test error: {float(np.mean(pred != yte)):.4f}")
 Kf = RBFKernel(X, sigma=sigma)
 apf = spsd.fast_model(Kf, jax.random.PRNGKey(1), c=c, s=s)
 V = eig.spectral_embedding(apf.C, apf.U, 6)
-from numpy.random import default_rng
 rngk = default_rng(0)
 C0 = np.asarray(V)[rngk.choice(len(V), 6, replace=False)]
 lab = None

@@ -2,12 +2,15 @@
 
 Public API re-exports.
 """
-from repro.core.kernelop import (DenseSPSD, LinearKernel, RBFKernel,
-                                 SPSDOperator, as_operator)
+from repro.core.kernelop import (DenseSPSD, LinearKernel, PairwiseKernel,
+                                 RBFKernel, SPSDOperator, as_operator)
+from repro.kernels.pairwise.specs import (KernelSpec, get_spec,
+                                          register_kernel, registered_kernels)
 from repro.core.sweep import (ColumnGatherPlan, DiagPlan, FrobeniusPlan,
                               GramPlan, MatmulPlan, ProjResidualColNormPlan,
                               ResidualFroPlan, RowQuadFormPlan,
-                              SketchRightPlan, mesh_data_size, sweep_panels)
+                              SketchRightPlan, mesh_data_size, sweep_operator,
+                              sweep_panels)
 from repro.core.instrument import CountingOperator
 from repro.core.leverage import (column_leverage_scores,
                                  column_leverage_scores_gram,

@@ -10,7 +10,6 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.leverage import pinv
 
 
 class EigResult(NamedTuple):

@@ -6,7 +6,7 @@ the access patterns the fast model needs:
 
 - ``columns(idx)``   -> K[:, idx]           (n × c)    for C = K P
 - ``block(ri, ci)``  -> K[ri][:, ci]        (|ri|×|ci|) for S^T K S
-- ``diag()``                                            for RBF trace tricks
+- ``diag()``                                            for trace tricks
 - ``full()``         -> K                   (small-n tests only)
 
 plus the *streaming* protocol every large-n code path is built on:
@@ -20,11 +20,16 @@ plus the *streaming* protocol every large-n code path is built on:
 - ``matmat(V)``           -> K @ V streamed through row panels.
 - ``frobenius_norm_sq()`` -> ||K||_F² accumulated panel-by-panel.
 
-``RBFKernel`` computes entries on the fly from the d-dimensional data; on TPU
-both the block computation and the streaming matmat are backed by the fused
-Pallas kernels in ``repro.kernels.rbf_sketch`` (see ``use_pallas``), and
-matmul-shaped sweeps collapse into one multi-right-hand-side Pallas launch
-whose kernel tiles never leave VMEM.
+Route selection lives in the sweep engine (``sweep.sweep_operator``) behind a
+small capability protocol — ``supports_fused_matmat()`` / ``fused_rows()`` —
+so any capable operator gets the fused Pallas fast paths at every call site.
+
+``PairwiseKernel`` computes entries on the fly from the d-dimensional data
+for ANY registered ``KernelSpec`` (rbf, laplacian, matern32, polynomial,
+linear, or user-registered — see ``repro.kernels.pairwise.specs``); with
+``use_pallas=True`` blocks and matmul-shaped sweeps run the fused pairwise
+Pallas template, whose kernel tiles never leave VMEM.  ``RBFKernel`` and
+``LinearKernel`` survive as thin back-compat constructors over it.
 """
 from __future__ import annotations
 
@@ -35,6 +40,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sweep as sweep_lib
+from repro.kernels.pairwise import specs as pairwise_specs
+from repro.kernels.pairwise.specs import KernelSpec
 
 # Back-compat aliases; the canonical definitions live in repro.core.sweep.
 _PANEL_ELEMENT_BUDGET = sweep_lib.PANEL_ELEMENT_BUDGET
@@ -50,12 +57,42 @@ class SPSDOperator:
         raise NotImplementedError
 
     def columns(self, idx: jnp.ndarray) -> jnp.ndarray:
-        return self.block(jnp.arange(self.n), idx)
+        """K[:, idx] through a ``ColumnGatherPlan`` sweep over the selected
+        columns.
+
+        The default deliberately does NOT call ``block(arange(n), idx)``:
+        that would eagerly build an n-length row index (and for most
+        implementations gather a full copy of the backing data) on every
+        gather.  Instead the panel engine walks row panels of the n × c
+        *selected-column view* ``block(rows, idx)`` — row indices only ever
+        exist per-panel inside the scan, peak memory is O(b·c), and exactly
+        the n·c requested entries are evaluated (the entry count
+        ``CountingOperator`` meters for a gather).  Implementations with a
+        cheaper direct form (dense K, factored or pairwise kernels)
+        override this.
+        """
+        idx = jnp.asarray(idx)
+        c = idx.shape[0]
+        (C,) = sweep_lib.sweep_panels(
+            lambda rows: self.block(rows, idx), self.n, c,
+            [sweep_lib.ColumnGatherPlan(jnp.arange(c))])
+        return C
 
     def full(self) -> jnp.ndarray:
         raise NotImplementedError
 
     def diag(self) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # -- fused-sweep capability protocol (see sweep.sweep_operator) ---------
+
+    def supports_fused_matmat(self) -> bool:
+        """True when ``fused_rows`` answers matmul-shaped plan bundles."""
+        return False
+
+    def fused_rows(self, row_idx: Optional[jnp.ndarray], Vs):
+        """[K[row_idx, :] @ V for V in Vs] in one fused launch (row_idx=None
+        -> all rows).  Only called when ``supports_fused_matmat()``."""
         raise NotImplementedError
 
     # -- streaming protocol -------------------------------------------------
@@ -69,12 +106,13 @@ class SPSDOperator:
         column gathers for C, Hutchinson probes, residual norms — costs one
         evaluation of each kernel tile.  A non-trivial ``mesh`` shards the
         panels over its data axes via ``shard_map`` (single-device meshes and
-        ``mesh=None`` fall back to the sequential scan).
+        ``mesh=None`` fall back to the sequential scan).  Route selection —
+        fused Pallas launches for matmul-shaped bundles on capable
+        operators, the blocked panel scan otherwise — happens in
+        ``sweep.sweep_operator`` and is recorded on ``_last_sweep_route``.
         """
-        cols = jnp.arange(self.n)
-        return sweep_lib.sweep_panels(
-            lambda idx: self.block(idx, cols), self.n, self.n, plans,
-            block_size=block_size, mesh=mesh)
+        return sweep_lib.sweep_operator(self, plans, block_size=block_size,
+                                        mesh=mesh)
 
     def map_row_panels(self, fn, block_size: Optional[int] = None):
         """Apply ``fn(panel, row_idx, valid)`` to consecutive (b × n) row panels.
@@ -150,151 +188,115 @@ class DenseSPSD(SPSDOperator):
         return jnp.sum(K32 * K32)
 
 
-def _sqdist(X: jnp.ndarray, Y: jnp.ndarray) -> jnp.ndarray:
-    """Pairwise squared distances, MXU-friendly: |x|^2 + |y|^2 - 2 x.y."""
-    xx = jnp.sum(X * X, axis=1)
-    yy = jnp.sum(Y * Y, axis=1)
-    cross = X @ Y.T
-    return jnp.maximum(xx[:, None] + yy[None, :] - 2.0 * cross, 0.0)
-
-
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
-class RBFKernel(SPSDOperator):
-    """K_ij = exp(-|x_i - x_j|^2 / (2 sigma^2)) computed from X (n × d)."""
+class PairwiseKernel(SPSDOperator):
+    """K_ij = entry_fn(stat(x_i, x_j)) for ANY registered ``KernelSpec``.
+
+    One operator class for the whole kernel family: the spec supplies the
+    pairwise statistic + elementwise entry function
+    (``repro.kernels.pairwise.specs``), and this class supplies the operator
+    protocol around it — on-the-fly blocks, the O(n·d) ``diag()`` shortcut,
+    the direct n×c column gather, and the fused-sweep capability hooks
+    (``supports_fused_matmat`` / ``fused_rows``) the sweep engine routes
+    through, so every kernel rides the same single-launch multi-RHS Pallas
+    sweeps and shard_map row-slab claims that PR 2/3 built for RBF::
+
+        from repro.kernels.pairwise import specs
+        K = PairwiseKernel(X, specs.get_spec("laplacian", gamma=0.5),
+                           use_pallas=True)
+        ap = spsd.fast_model(K, key, c=100, s=400, s_sketch="gaussian")
+    """
 
     X: jnp.ndarray
-    sigma: float
+    spec: KernelSpec
     use_pallas: bool = False
 
     def tree_flatten(self):
-        return (self.X,), (self.sigma, self.use_pallas)
+        return (self.X,), (self.spec, self.use_pallas)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0], aux[0], aux[1])
+        obj = object.__new__(cls)          # skip subclass back-compat inits
+        obj.X, obj.spec, obj.use_pallas = children[0], aux[0], aux[1]
+        return obj
 
     @property
     def n(self) -> int:
         return int(self.X.shape[0])
-
-    def _gamma(self):
-        return 1.0 / (2.0 * self.sigma ** 2)
 
     def block(self, row_idx, col_idx):
         Xr = jnp.take(self.X, row_idx, axis=0)
         Xc = jnp.take(self.X, col_idx, axis=0)
         if self.use_pallas:
-            from repro.kernels.rbf_sketch import ops as rbf_ops
-            return rbf_ops.rbf_block(Xr, Xc, self.sigma)
-        return jnp.exp(-self._gamma() * _sqdist(Xr, Xc))
+            from repro.kernels.pairwise import ops as pw_ops
+            return pw_ops.kernel_block(self.spec, Xr, Xc)
+        return pairwise_specs.apply(self.spec, Xr, Xc)
+
+    def columns(self, idx):
+        # n·c entries straight from the data: no n-length row index, no row
+        # gather — the columns ARE a (all-rows × selected-points) block.
+        Xc = jnp.take(self.X, idx, axis=0)
+        if self.use_pallas:
+            from repro.kernels.pairwise import ops as pw_ops
+            return pw_ops.kernel_block(self.spec, self.X, Xc)
+        return pairwise_specs.apply(self.spec, self.X, Xc)
 
     def full(self):
-        return jnp.exp(-self._gamma() * _sqdist(self.X, self.X))
+        return pairwise_specs.apply(self.spec, self.X, self.X)
 
     def diag(self):
-        return jnp.ones((self.n,), self.X.dtype)
+        # O(n·d), touches no off-diagonal entry (constant for distance
+        # statistics, row norms through entry_fn for the dot statistic).
+        return pairwise_specs.diag(self.spec, self.X)
 
-    def matmat(self, V, block_size: Optional[int] = None, mesh=None):
-        if self.use_pallas and sweep_lib.mesh_data_size(mesh) <= 1:
-            from repro.kernels.rbf_sketch import ops as rbf_ops
-            return rbf_ops.rbf_matmat(self.X, V, self.sigma)
-        return SPSDOperator.matmat(self, V, block_size, mesh=mesh)
+    # -- fused-sweep capability (sweep.sweep_operator routes through these) --
 
-    def _fused_rhs(self, plans: Sequence):
-        """Dense f32 right-hand sides for a matmul-shaped plan bundle.
+    def supports_fused_matmat(self) -> bool:
+        return bool(self.use_pallas)
 
-        Column gathers ride along as one-hot right-hand sides (exact: each
-        output entry is one K entry times 1.0).
-        """
-        n = self.n
-        return tuple(
-            p.V.astype(jnp.float32) if isinstance(p, sweep_lib.MatmulPlan)
-            else jax.nn.one_hot(p.col_idx, n, dtype=jnp.float32).T
-            for p in plans)
-
-    def sweep(self, plans: Sequence, block_size: Optional[int] = None,
-              mesh=None):
-        """Matmul-shaped sweeps fuse into ONE multi-RHS Pallas launch per
-        device.
-
-        When every plan is a matmat or a column gather (the fast-model
-        bundle: C = K P plus K @ S plus probes), the whole sweep lowers to
-        ``rbf_matmat_multi`` calls whose kernel tiles are computed once in
-        VMEM and contracted against all right-hand sides before being
-        discarded — no kernel entry is ever evaluated twice or staged in HBM.
-        On a trivial mesh that is one square launch; on a non-trivial mesh
-        the bundle is *claimed per shard* through the sweep engine's
-        ``slab_fn`` hook: each device gathers its contiguous local row slab
-        and runs one rectangular ``rbf_matmat_multi_rows`` launch, with the
-        partial carries psum-reduced exactly like the panel route.  The
-        route taken is recorded on ``self._last_sweep_route``
-        ('pallas_fused' | 'pallas_fused_sharded' | 'panel') so
-        instrumentation can assert the fast path stays engaged.
-        """
-        plans = list(plans)
-        fused = self.use_pallas and plans and all(
-            isinstance(p, (sweep_lib.MatmulPlan, sweep_lib.ColumnGatherPlan))
-            for p in plans)
-        if fused and sweep_lib.mesh_data_size(mesh) <= 1:
-            self._last_sweep_route = "pallas_fused"
-            from repro.kernels.rbf_sketch import ops as rbf_ops
-            return list(rbf_ops.rbf_matmat_multi(self.X,
-                                                 self._fused_rhs(plans),
-                                                 self.sigma))
-        if fused:
-            self._last_sweep_route = "pallas_fused_sharded"
-            from repro.kernels.rbf_sketch import ops as rbf_ops
-            n = self.n
-            Vs = self._fused_rhs(plans)
-
-            def slab_fn(row_idx, valid):
-                # One rectangular launch for this shard's row slab: only the
-                # slab's kernel tiles are evaluated, each exactly once.
-                Xr = jnp.take(self.X, row_idx, axis=0)
-                outs = rbf_ops.rbf_matmat_multi_rows(Xr, self.X, Vs,
-                                                     self.sigma)
-                v = valid.astype(jnp.float32)[:, None]
-                return tuple(p.init(n, n).at[row_idx].add(o * v)
-                             for p, o in zip(plans, outs))
-
-            # panel_fn=None: the claim is unconditional, the scan never runs
-            return sweep_lib.sweep_panels(
-                None, n, n, plans,
-                block_size=block_size, mesh=mesh, slab_fn=slab_fn)
-        self._last_sweep_route = "panel"
-        return SPSDOperator.sweep(self, plans, block_size, mesh=mesh)
+    def fused_rows(self, row_idx, Vs):
+        """One rectangular multi-RHS Pallas launch for a contiguous row slab:
+        the slab's kernel tiles are computed once in VMEM and contracted
+        against every right-hand side (``row_idx=None`` -> the square
+        all-rows launch)."""
+        from repro.kernels.pairwise import ops as pw_ops
+        Xr = self.X if row_idx is None else jnp.take(self.X, row_idx, axis=0)
+        return pw_ops.kernel_matmat_multi_rows(self.spec, Xr, self.X, Vs)
 
 
 @jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class LinearKernel(SPSDOperator):
-    """K = X X^T (n × n) from X (n × d)."""
+class RBFKernel(PairwiseKernel):
+    """K_ij = exp(-|x_i - x_j|^2 / (2 sigma^2)) computed from X (n × d).
 
-    X: jnp.ndarray
+    Thin back-compat constructor over ``PairwiseKernel`` with the registry's
+    ``rbf`` spec; all routing/streaming behavior lives in the base class.
+    """
 
-    def tree_flatten(self):
-        return (self.X,), ()
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(children[0])
+    def __init__(self, X: jnp.ndarray, sigma: float,
+                 use_pallas: bool = False):
+        PairwiseKernel.__init__(self, X, pairwise_specs.rbf(sigma),
+                                use_pallas)
 
     @property
-    def n(self) -> int:
-        return int(self.X.shape[0])
+    def sigma(self) -> float:
+        return self.spec.param("sigma")
+
+
+@jax.tree_util.register_pytree_node_class
+class LinearKernel(PairwiseKernel):
+    """K = X X^T (n × n) from X (n × d).
+
+    The ``linear`` spec through ``PairwiseKernel``, plus the factored
+    O(n·d)-per-product fast paths the explicit X Xᵀ structure allows (a
+    fused entry-wise sweep could never beat (Xᵀ V) first).
+    """
+
+    def __init__(self, X: jnp.ndarray, use_pallas: bool = False):
+        PairwiseKernel.__init__(self, X, pairwise_specs.linear(), use_pallas)
 
     def columns(self, idx):
         return self.X @ jnp.take(self.X, idx, axis=0).T
-
-    def block(self, row_idx, col_idx):
-        return jnp.take(self.X, row_idx, axis=0) @ jnp.take(self.X, col_idx, axis=0).T
-
-    def full(self):
-        return self.X @ self.X.T
-
-    def diag(self):
-        return jnp.sum(self.X * self.X, axis=1)
 
     def matmat(self, V, block_size: Optional[int] = None, mesh=None):
         return self.X @ (self.X.T @ V)

@@ -1,7 +1,6 @@
 """Leverage scores and coherence (paper §2)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

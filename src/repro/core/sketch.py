@@ -16,7 +16,6 @@ read *blocks* of an implicit kernel matrix (Fig. 1's memory trick).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

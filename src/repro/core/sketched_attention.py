@@ -21,7 +21,7 @@ For autoregressive decode with a fixed context the factors ``Ũ (R̂ V)`` and
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -354,23 +354,33 @@ def _resolve_error_method(Kop: SPSDOperator, method: str) -> str:
 
 
 def _blocked_residual_fro2(Kop: SPSDOperator, approx: SPSDApprox,
-                           block_size: Optional[int], mesh=None):
-    """(||K - CUC^T||_F², ||K||_F²) in one panel sweep."""
+                           block_size: Optional[int], mesh=None,
+                           extra_plans=()):
+    """(||K - CUC^T||_F², ||K||_F², extra results) in ONE panel sweep.
+
+    ``extra_plans`` ride the same pass (e.g. the subspace-iteration K Ω of
+    ``error_vs_best_rank_k``); their results come back in order.
+    """
     C32 = approx.C.astype(jnp.float32)
     M = approx.U.astype(jnp.float32) @ C32.T              # (c, n)
-    ((num, den),) = Kop.sweep([sweep_lib.ResidualFroPlan(C32, M)],
-                              block_size=block_size, mesh=mesh)
-    return num, den
+    *extras, (num, den) = Kop.sweep(
+        [*extra_plans, sweep_lib.ResidualFroPlan(C32, M)],
+        block_size=block_size, mesh=mesh)
+    return num, den, extras
 
 
 def _hutchinson_residual_fro2(Kop: SPSDOperator, approx: SPSDApprox,
                               probes: int, key: jax.Array,
-                              block_size: Optional[int], mesh=None):
-    """Rademacher estimates of (||K - CUC^T||_F², ||K||_F²)."""
+                              block_size: Optional[int], mesh=None,
+                              extra_plans=()):
+    """Rademacher estimates of (||K - CUC^T||_F², ||K||_F²), plus the
+    results of any ``extra_plans`` fused into the same probe sweep."""
     Z = jax.random.rademacher(key, (Kop.n, probes), dtype=jnp.float32)
-    KZ = Kop.matmat(Z, block_size=block_size, mesh=mesh).astype(jnp.float32)
+    *extras, KZ = Kop.sweep([*extra_plans, sweep_lib.MatmulPlan(Z)],
+                            block_size=block_size, mesh=mesh)
+    KZ = KZ.astype(jnp.float32)
     RZ = KZ - approx.matmat(Z).astype(jnp.float32)
-    return jnp.sum(RZ * RZ) / probes, jnp.sum(KZ * KZ) / probes
+    return jnp.sum(RZ * RZ) / probes, jnp.sum(KZ * KZ) / probes, extras
 
 
 def relative_error(K, approx: SPSDApprox, method: str = "auto",
@@ -390,14 +400,34 @@ def relative_error(K, approx: SPSDApprox, method: str = "auto",
         R = Kd - approx.dense().astype(jnp.float32)
         return jnp.sum(R * R) / jnp.sum(Kd * Kd)
     if method == "blocked":
-        num, den = _blocked_residual_fro2(Kop, approx, block_size, mesh)
+        num, den, _ = _blocked_residual_fro2(Kop, approx, block_size, mesh)
         return num / den
     if method == "hutchinson":
         key = jax.random.PRNGKey(0) if key is None else key
-        num, den = _hutchinson_residual_fro2(Kop, approx, probes, key,
-                                             block_size, mesh)
+        num, den, _ = _hutchinson_residual_fro2(Kop, approx, probes, key,
+                                                block_size, mesh)
         return num / den
     raise ValueError(f"unknown error method {method!r}")
+
+
+def _subspace_eigvals_from_Y(Kop: SPSDOperator, Y: jnp.ndarray, k: int,
+                             power_iters: int,
+                             block_size: Optional[int], mesh=None):
+    """Finish subspace iteration given the first product Y = K Ω.
+
+    The remaining cost is ``power_iters`` power passes plus the Rayleigh
+    quotient — (1 + power_iters) sweeps.  Factored out so callers that
+    already have a sweep in flight (``error_vs_best_rank_k``) can fold the
+    Y = K Ω pass into it instead of paying a dedicated one.
+    """
+    for _ in range(power_iters):
+        Q, _ = jnp.linalg.qr(Y)
+        Y = Kop.matmat(Q, block_size=block_size, mesh=mesh)
+    Q, _ = jnp.linalg.qr(Y)
+    B = Q.T @ Kop.matmat(Q, block_size=block_size, mesh=mesh)
+    B = 0.5 * (B + B.T)
+    lam = jnp.linalg.eigvalsh(B)[::-1]
+    return lam[:k]
 
 
 def streaming_topk_eigvals(K, k: int, key: Optional[jax.Array] = None,
@@ -415,14 +445,7 @@ def streaming_topk_eigvals(K, k: int, key: Optional[jax.Array] = None,
     q = min(Kop.n, k + oversample)
     Y = Kop.matmat(jax.random.normal(key, (Kop.n, q), dtype=jnp.float32),
                    block_size=block_size, mesh=mesh)
-    for _ in range(power_iters):
-        Q, _ = jnp.linalg.qr(Y)
-        Y = Kop.matmat(Q, block_size=block_size, mesh=mesh)
-    Q, _ = jnp.linalg.qr(Y)
-    B = Q.T @ Kop.matmat(Q, block_size=block_size, mesh=mesh)
-    B = 0.5 * (B + B.T)
-    lam = jnp.linalg.eigvalsh(B)[::-1]
-    return lam[:k]
+    return _subspace_eigvals_from_Y(Kop, Y, k, power_iters, block_size, mesh)
 
 
 def error_vs_best_rank_k(K, approx: SPSDApprox, k: int, method: str = "auto",
@@ -432,7 +455,10 @@ def error_vs_best_rank_k(K, approx: SPSDApprox, k: int, method: str = "auto",
     """||K - CUC^T||_F² / ||K - K_k||_F²  (the 1+ε target of Thm 3/Remark 4).
 
     Streaming methods use ||K - K_k||_F² = ||K||_F² - Σ_{i≤k} λ_i² (K SPSD)
-    with the top spectrum from ``streaming_topk_eigvals``.
+    with the top spectrum by randomized subspace iteration — whose FIRST
+    product Y = K Ω rides the same panel sweep as the residual accumulation
+    (blocked) or the Hutchinson probes, so the whole metric costs
+    (2 + power_iters) sweeps instead of (3 + power_iters).
     """
     Kop = as_operator(K)
     method = _resolve_error_method(Kop, method)
@@ -449,14 +475,20 @@ def error_vs_best_rank_k(K, approx: SPSDApprox, k: int, method: str = "auto",
         return jnp.sum(R * R) / tail
     key = jax.random.PRNGKey(0) if key is None else key
     keig, kprobe = jax.random.split(key)
-    lam = streaming_topk_eigvals(Kop, k, keig, block_size=block_size,
-                                 mesh=mesh)
+    n = Kop.n
+    q = min(n, k + 8)                       # streaming_topk_eigvals defaults
+    power_iters = 2
+    omega_plan = sweep_lib.MatmulPlan(
+        jax.random.normal(keig, (n, q), dtype=jnp.float32))
     if method == "blocked":
-        num, fro2 = _blocked_residual_fro2(Kop, approx, block_size, mesh)
+        num, fro2, (Y,) = _blocked_residual_fro2(
+            Kop, approx, block_size, mesh, extra_plans=[omega_plan])
     elif method == "hutchinson":
-        num, fro2 = _hutchinson_residual_fro2(Kop, approx, probes, kprobe,
-                                              block_size, mesh)
+        num, fro2, (Y,) = _hutchinson_residual_fro2(
+            Kop, approx, probes, kprobe, block_size, mesh,
+            extra_plans=[omega_plan])
     else:
         raise ValueError(f"unknown error method {method!r}")
+    lam = _subspace_eigvals_from_Y(Kop, Y, k, power_iters, block_size, mesh)
     tail = jnp.maximum(fro2 - jnp.sum(lam ** 2), 1e-12 * fro2)
     return num / tail

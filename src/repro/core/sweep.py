@@ -341,6 +341,87 @@ class RowQuadFormPlan:
 
 
 # ---------------------------------------------------------------------------
+# route selection (the operator capability protocol)
+# ---------------------------------------------------------------------------
+#
+# PR 3 hardwired the fused-Pallas routing decision inside ``RBFKernel.sweep``;
+# it now lives here, behind two small capability hooks any operator may
+# implement:
+#
+#     supports_fused_matmat() -> bool
+#         True when the operator can answer a whole matmul-shaped plan bundle
+#         with one fused launch (e.g. a Pallas-backed ``PairwiseKernel``).
+#     fused_rows(row_idx, Vs) -> tuple[jnp.ndarray, ...]
+#         [A[row_idx, :] @ V for V in Vs] for a contiguous row slab
+#         (``row_idx=None`` means all rows — the square single-device case).
+#
+# Every sweep consumer (``fast_model``, ``fast_cur``, eig/error metrics,
+# adaptive sampling) goes through ``sweep_operator`` and therefore gets the
+# fast path for every capable operator with zero per-call-site changes.  The
+# chosen route is recorded on ``op._last_sweep_route`` ('pallas_fused' |
+# 'pallas_fused_sharded' | 'panel') for instrumentation
+# (``CountingOperator.last_route``).
+
+def is_matmul_shaped(plans: Sequence) -> bool:
+    """True when every plan reduces to A @ V for some dense right-hand side
+    (matmats as-is; column gathers as one-hot columns)."""
+    plans = list(plans)
+    return bool(plans) and all(
+        isinstance(p, (MatmulPlan, ColumnGatherPlan)) for p in plans)
+
+
+def fused_right_hand_sides(plans: Sequence, ncols: int):
+    """Dense f32 right-hand sides for a matmul-shaped plan bundle.
+
+    Column gathers ride along as one-hot right-hand sides (exact: each
+    output entry is one A entry times 1.0).
+    """
+    return tuple(
+        p.V.astype(jnp.float32) if isinstance(p, MatmulPlan)
+        else jax.nn.one_hot(p.col_idx, ncols, dtype=jnp.float32).T
+        for p in plans)
+
+
+def sweep_operator(op, plans: Sequence, block_size: Optional[int] = None,
+                   mesh: Optional[Mesh] = None):
+    """Run a plan bundle over a square operator's rows, fastest route first.
+
+    Matmul-shaped bundles on a capable operator collapse into ONE fused
+    multi-RHS launch per device: a single square launch on a trivial mesh
+    ('pallas_fused'), or — on a non-trivial mesh — a per-shard claim through
+    the engine's ``slab_fn`` hook, where each device runs one rectangular
+    row-slab launch and the partial carries are psum-reduced exactly like the
+    panel route ('pallas_fused_sharded').  Everything else walks the blocked
+    panel scan over ``op.block`` ('panel').
+    """
+    plans = list(plans)
+    n = op.n
+    fused = op.supports_fused_matmat() and is_matmul_shaped(plans)
+    if fused and mesh_data_size(mesh) <= 1:
+        op._last_sweep_route = "pallas_fused"
+        return list(op.fused_rows(None, fused_right_hand_sides(plans, n)))
+    if fused:
+        op._last_sweep_route = "pallas_fused_sharded"
+        Vs = fused_right_hand_sides(plans, n)
+
+        def slab_fn(row_idx, valid):
+            # One rectangular launch for this shard's row slab: only the
+            # slab's kernel tiles are evaluated, each exactly once.
+            outs = op.fused_rows(row_idx, Vs)
+            v = valid.astype(jnp.float32)[:, None]
+            return tuple(p.init(n, n).at[row_idx].add(o * v)
+                         for p, o in zip(plans, outs))
+
+        # panel_fn=None: the claim is unconditional, the scan never runs
+        return sweep_panels(None, n, n, plans,
+                            block_size=block_size, mesh=mesh, slab_fn=slab_fn)
+    op._last_sweep_route = "panel"
+    cols = jnp.arange(n)
+    return sweep_panels(lambda idx: op.block(idx, cols), n, n, plans,
+                        block_size=block_size, mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
 
@@ -381,7 +462,8 @@ def sweep_panels(panel_fn, nrows: int, ncols: int, plans: Sequence,
 
     ``slab_fn`` is the per-shard fast-path hook: an operator that can produce
     a whole contiguous row slab's worth of carries in one shot (e.g. the
-    fused multi-RHS Pallas launch of ``RBFKernel``) claims the plan bundle by
+    fused multi-RHS Pallas launch of ``PairwiseKernel``) claims the plan
+    bundle by
     passing ``slab_fn(row_idx, valid) -> tuple(carry per plan)``.  ``row_idx``
     is the shard's full local row range — ``local_slab_rows`` rows, clamped
     into ``[0, nrows)`` with ``valid`` masking clamp/sentinel padding — and

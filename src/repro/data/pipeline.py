@@ -22,7 +22,6 @@ from __future__ import annotations
 import dataclasses
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -9,13 +9,18 @@ Each kernel is a package with three modules:
 
 Kernels:
 
-- ``rbf_sketch``          fused S^T K S for RBF kernels straight from the data
-                          (paper Fig. 1 / footnote-2 memory trick: K never hits HBM)
+- ``pairwise``            ONE tiled sweep template for every SPSD kernel
+                          family (paper Fig. 1 / footnote-2 memory trick: K
+                          never hits HBM), parameterized by a ``KernelSpec``
+                          (elementwise distance→entry fn) registry: rbf,
+                          laplacian, matern32, polynomial, linear, …
+- ``rbf_sketch``          back-compat RBF bindings of the pairwise template
 - ``flash_attention``     tiled online-softmax attention (causal / GQA / sliding
                           window) for the LM substrate
 - ``landmark_attention``  the paper's fast-SPSD U applied to the attention Gram:
                           fused exp-logits x (U @ R̂V) read — O(c·d) per query
 """
+from repro.kernels.pairwise import ops as pairwise_ops           # noqa: F401
 from repro.kernels.rbf_sketch import ops as rbf_ops              # noqa: F401
 from repro.kernels.flash_attention import ops as attention_ops   # noqa: F401
 from repro.kernels.landmark_attention import ops as landmark_ops  # noqa: F401

@@ -1,0 +1,4 @@
+from repro.kernels.pairwise import kernel, ops, ref, specs  # noqa: F401
+from repro.kernels.pairwise.specs import (KernelSpec, get_spec,  # noqa: F401
+                                          register_kernel,
+                                          registered_kernels)

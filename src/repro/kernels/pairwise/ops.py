@@ -1,0 +1,148 @@
+"""Public jit'd wrappers for the pairwise kernel sweep template.
+
+Handles arbitrary (non-tile-aligned) shapes by zero-padding the point sets and
+slicing the output; padding rows produce garbage kernel values that are sliced
+away (block path) or contracted against zero-padded V rows (matmat path),
+never read.
+
+Backend selection (interpret mode on CPU containers, compiled on real TPU) is
+resolved at *call* time, not import time: each public wrapper reads
+``jax.default_backend()`` when invoked — unless the caller passes an explicit
+``interpret=`` — and threads the choice into the jit cache as a static
+argument, so flipping the backend after import can never run a stale
+interpret decision.  The ``spec`` is likewise a static argument: registry
+factories cache their ``KernelSpec`` objects, so each (kernel, params) pair
+costs one compilation, not one per call.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise import kernel as _k
+from repro.kernels.pairwise import specs as _specs
+from repro.kernels.pairwise.specs import KernelSpec
+
+
+def _interpret_mode() -> bool:
+    """CPU containers interpret the TPU kernel; real TPU compiles it.
+
+    A function (not a module constant) on purpose: the backend may be chosen
+    after this module is imported, so the decision must be re-read per call.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(X: jnp.ndarray, mult: int) -> jnp.ndarray:
+    n = X.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return X
+    return jnp.pad(X, ((0, pad), (0, 0)))
+
+
+def _pad_cols(V: jnp.ndarray, mult: int) -> jnp.ndarray:
+    m = V.shape[1]
+    pad = (-m) % mult
+    if pad == 0:
+        return V
+    return jnp.pad(V, ((0, 0), (0, pad)))
+
+
+@partial(jax.jit, static_argnames=("spec", "use_pallas", "interpret"))
+def _kernel_block_jit(Xr: jnp.ndarray, Xc: jnp.ndarray, spec: KernelSpec,
+                      use_pallas: bool, interpret: bool) -> jnp.ndarray:
+    if not use_pallas:
+        return _specs.apply(spec, Xr, Xc)
+    nr, nc = Xr.shape[0], Xc.shape[0]
+    Xrp = _pad_rows(Xr, _k.BLOCK_R)
+    Xcp = _pad_rows(Xc, _k.BLOCK_C)
+    out = _k.pairwise_block_padded(spec, Xrp, Xcp, interpret=interpret)
+    return out[:nr, :nc]
+
+
+def kernel_block(spec: KernelSpec, Xr: jnp.ndarray, Xc: jnp.ndarray,
+                 use_pallas: bool = True,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """K-block entry_fn(stat(x_r, x_c)) of shape (len(Xr), len(Xc))."""
+    if interpret is None:
+        interpret = _interpret_mode()
+    return _kernel_block_jit(Xr, Xc, spec, use_pallas, interpret)
+
+
+@partial(jax.jit, static_argnames=("spec", "use_pallas", "interpret"))
+def _kernel_matmat_multi_rows_jit(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs,
+                                  spec: KernelSpec, use_pallas: bool,
+                                  interpret: bool):
+    Vs = tuple(Vs)
+    if not use_pallas:
+        K = _specs.apply(spec, Xr, Xc)
+        return tuple(K @ V.astype(jnp.float32) for V in Vs)
+    nr = Xr.shape[0]
+    ms = [V.shape[1] for V in Vs]
+    Xrp = _pad_rows(Xr, _k.BLOCK_R)
+    Xcp = _pad_rows(Xc, _k.BLOCK_C)
+    Vps = tuple(_pad_cols(_pad_rows(V, _k.BLOCK_C), 128) for V in Vs)
+    outs = _k.pairwise_matmat_multi_padded(spec, Xrp, Xcp, Vps,
+                                           interpret=interpret)
+    return tuple(out[:nr, :m] for out, m in zip(outs, ms))
+
+
+def kernel_matmat_multi_rows(spec: KernelSpec, Xr: jnp.ndarray,
+                             Xc: jnp.ndarray, Vs, use_pallas: bool = True,
+                             interpret: bool | None = None):
+    """[K(Xr, Xc) @ V for V in Vs] — the rectangular row-slab fusion.
+
+    The shard_map fast path of the sweep engine: each device gathers its
+    contiguous local row slab ``Xr = X[r0:r1]`` and passes the full column
+    points ``Xc``, so only that slab's (128 × 128) kernel tiles are ever
+    computed — once, in VMEM — and contracted against every right-hand side.
+    """
+    if interpret is None:
+        interpret = _interpret_mode()
+    return _kernel_matmat_multi_rows_jit(Xr, Xc, tuple(Vs), spec, use_pallas,
+                                         interpret)
+
+
+def kernel_matmat_multi(spec: KernelSpec, X: jnp.ndarray, Vs,
+                        use_pallas: bool = True,
+                        interpret: bool | None = None):
+    """[K(X, X) @ V for V in Vs] with each kernel tile computed ONCE.
+
+    The sweep-engine fast path: all right-hand sides (projection sketches,
+    Hutchinson probes, one-hot column gathers for C = K P) are contracted
+    against the same VMEM-resident kernel tile in a single Pallas launch.
+    The square special case of ``kernel_matmat_multi_rows``.
+    """
+    return kernel_matmat_multi_rows(spec, X, X, Vs, use_pallas=use_pallas,
+                                    interpret=interpret)
+
+
+def kernel_matmat(spec: KernelSpec, X: jnp.ndarray, V: jnp.ndarray,
+                  use_pallas: bool = True,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """K(X, X) @ V fused: kernel tiles never leave VMEM (streaming matmat)."""
+    squeeze = V.ndim == 1
+    V2 = V[:, None] if squeeze else V
+    (out,) = kernel_matmat_multi(spec, X, (V2,), use_pallas=use_pallas,
+                                 interpret=interpret)
+    return out[:, 0] if squeeze else out
+
+
+@partial(jax.jit, static_argnames=("spec", "interpret"))
+def _sketched_gram_jit(Xs: jnp.ndarray, spec: KernelSpec, scales, interpret):
+    blk = _kernel_block_jit(Xs, Xs, spec, True, interpret)
+    if scales is not None:
+        blk = blk * (scales[:, None] * scales[None, :])
+    return blk
+
+
+def sketched_gram(spec: KernelSpec, Xs: jnp.ndarray,
+                  scales: jnp.ndarray | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """S^T K S for a column sketch S given the selected points Xs = X[idx]."""
+    if interpret is None:
+        interpret = _interpret_mode()
+    return _sketched_gram_jit(Xs, spec, scales, interpret)

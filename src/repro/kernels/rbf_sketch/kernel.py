@@ -1,202 +1,35 @@
-"""Fused RBF kernel-block Pallas kernel (paper Fig. 1 memory trick, TPU-native).
+"""Back-compat shim: the fused RBF Pallas kernels are now the ``rbf`` spec of
+the generalized pairwise sweep template (``repro.kernels.pairwise.kernel``).
 
-The paper's fast model only ever touches an ``n x c`` panel and an ``s x s``
-block of the kernel matrix.  On TPU we compute those blocks straight from the
-data ``X`` without staging the pairwise-distance matrix in HBM:
-
-  - the cross term ``Xr @ Xc^T`` runs on the MXU (f32 accumulation),
-  - ``exp(-gamma * max(|x_i|^2 + |x_j|^2 - 2 x_i.x_j, 0))`` runs on the VPU,
-  - output tiles are (block_r, block_c) = (128, 128) — MXU/lane aligned,
-  - the feature dimension d stays resident in VMEM per tile (d <= a few
-    thousand for the paper's datasets; the tile working set is
-    2*128*d + 128*128 floats, well under the ~16 MB v5e VMEM budget).
-
-HBM traffic is O((nr + nc) * d + nr * nc) instead of O(n^2 * d) for a full
-materialization — exactly the Table-3 "#Entries" story.
+Kept so existing imports of the padded entry points and tile constants keep
+working; new code should target the pairwise template directly.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-BLOCK_R = 128
-BLOCK_C = 128
-
-
-def _rbf_block_kernel(xr_ref, xc_ref, o_ref, *, gamma: float):
-    """One (BLOCK_R, BLOCK_C) output tile.
-
-    xr_ref: (BLOCK_R, d) VMEM tile of row points
-    xc_ref: (BLOCK_C, d) VMEM tile of column points
-    o_ref:  (BLOCK_R, BLOCK_C) VMEM output tile
-    """
-    xr = xr_ref[...].astype(jnp.float32)
-    xc = xc_ref[...].astype(jnp.float32)
-    # MXU: cross inner products with f32 accumulation.
-    cross = jax.lax.dot_general(
-        xr, xc,
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    # VPU: norms, combine, exp.
-    rr = jnp.sum(xr * xr, axis=1, keepdims=True)          # (BLOCK_R, 1)
-    cc = jnp.sum(xc * xc, axis=1, keepdims=True)          # (BLOCK_C, 1)
-    sq = jnp.maximum(rr + cc.T - 2.0 * cross, 0.0)
-    o_ref[...] = jnp.exp(-gamma * sq)
-
-
-def _rbf_matmat_kernel(xr_ref, xc_ref, v_ref, o_ref, *, gamma: float):
-    """One (BLOCK_R, m) output tile of K(Xr, Xc) @ V, accumulated over the
-    column-tile grid axis.
-
-    The (BLOCK_R, BLOCK_C) kernel tile lives only in VMEM/registers: it is
-    produced on the MXU/VPU and immediately contracted against the matching
-    (BLOCK_C, m) tile of V, so HBM traffic is O((nr + nc)·d + nc·m + nr·m)
-    instead of O(nr·nc) for staging K.
-
-    xr_ref: (BLOCK_R, d) row points        — revisited across j
-    xc_ref: (BLOCK_C, d) column points     — walks the contraction axis j
-    v_ref:  (BLOCK_C, m) right-hand tile   — walks j in lockstep with xc
-    o_ref:  (BLOCK_R, m) accumulator tile
-    """
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    xr = xr_ref[...].astype(jnp.float32)
-    xc = xc_ref[...].astype(jnp.float32)
-    cross = jax.lax.dot_general(
-        xr, xc,
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    rr = jnp.sum(xr * xr, axis=1, keepdims=True)
-    cc = jnp.sum(xc * xc, axis=1, keepdims=True)
-    k_tile = jnp.exp(-gamma * jnp.maximum(rr + cc.T - 2.0 * cross, 0.0))
-    o_ref[...] += jax.lax.dot_general(
-        k_tile, v_ref[...].astype(jnp.float32),
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-
-
-def _rbf_matmat_multi_kernel(xr_ref, xc_ref, *refs, gamma: float, nv: int):
-    """Multi-right-hand-side fusion: one K tile, ``nv`` contractions.
-
-    The (BLOCK_R, BLOCK_C) kernel tile is produced once on the MXU/VPU and
-    immediately contracted against every (BLOCK_C, m_i) right-hand tile while
-    still in VMEM — the single-sweep panel engine at the kernel-tile level.
-    ``refs`` is ``nv`` V refs followed by ``nv`` output accumulator refs.
-    """
-    v_refs, o_refs = refs[:nv], refs[nv:]
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _():
-        for o_ref in o_refs:
-            o_ref[...] = jnp.zeros_like(o_ref)
-
-    xr = xr_ref[...].astype(jnp.float32)
-    xc = xc_ref[...].astype(jnp.float32)
-    cross = jax.lax.dot_general(
-        xr, xc,
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    rr = jnp.sum(xr * xr, axis=1, keepdims=True)
-    cc = jnp.sum(xc * xc, axis=1, keepdims=True)
-    k_tile = jnp.exp(-gamma * jnp.maximum(rr + cc.T - 2.0 * cross, 0.0))
-    for v_ref, o_ref in zip(v_refs, o_refs):
-        o_ref[...] += jax.lax.dot_general(
-            k_tile, v_ref[...].astype(jnp.float32),
-            dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
-
-
-def rbf_matmat_multi_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs,
-                            sigma: float, interpret: bool = False):
-    """[K(Xr, Xc) @ V for V in Vs] over padded inputs, one kernel launch.
-
-    ``Xr`` and ``Xc`` may differ: the grid is rectangular
-    (nr/BLOCK_R × nc/BLOCK_C), which is how the shard_map sweep fast path
-    launches one row *slab* per device — ``Xr`` is the device's contiguous
-    row range of the point set (a row-offset slice), ``Xc`` the full set, so
-    each device computes only its slab's kernel tiles in VMEM and contracts
-    them against every right-hand side exactly once.
-    """
-    nr, d = Xr.shape
-    nc = Xc.shape[0]
-    assert nr % BLOCK_R == 0 and nc % BLOCK_C == 0, (nr, nc)
-    for V in Vs:
-        assert V.shape[0] == nc and V.shape[1] % 128 == 0, V.shape
-    gamma = 1.0 / (2.0 * float(sigma) ** 2)
-    grid = (nr // BLOCK_R, nc // BLOCK_C)
-    return pl.pallas_call(
-        functools.partial(_rbf_matmat_multi_kernel, gamma=gamma, nv=len(Vs)),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
-        ] + [
-            pl.BlockSpec((BLOCK_C, V.shape[1]), lambda i, j: (j, 0))
-            for V in Vs
-        ],
-        out_specs=[
-            pl.BlockSpec((BLOCK_R, V.shape[1]), lambda i, j: (i, 0))
-            for V in Vs
-        ],
-        out_shape=[jax.ShapeDtypeStruct((nr, V.shape[1]), jnp.float32)
-                   for V in Vs],
-        interpret=interpret,
-    )(Xr, Xc, *Vs)
-
-
-def rbf_matmat_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, V: jnp.ndarray,
-                      sigma: float, interpret: bool = False) -> jnp.ndarray:
-    """K(Xr, Xc) @ V over padded inputs; all dims must be tile multiples."""
-    nr, d = Xr.shape
-    nc, m = V.shape
-    assert Xc.shape[0] == nc and nr % BLOCK_R == 0 and nc % BLOCK_C == 0, \
-        (Xr.shape, Xc.shape, V.shape)
-    assert m % 128 == 0, m
-    gamma = 1.0 / (2.0 * float(sigma) ** 2)
-    grid = (nr // BLOCK_R, nc // BLOCK_C)
-    return pl.pallas_call(
-        functools.partial(_rbf_matmat_kernel, gamma=gamma),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((BLOCK_C, m), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_R, m), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((nr, m), jnp.float32),
-        interpret=interpret,
-    )(Xr, Xc, V)
+from repro.kernels.pairwise import kernel as _pk
+from repro.kernels.pairwise.kernel import BLOCK_C, BLOCK_R  # noqa: F401
+from repro.kernels.pairwise.specs import rbf as _rbf_spec
 
 
 def rbf_block_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float,
                      interpret: bool = False) -> jnp.ndarray:
     """Pallas call over padded inputs; shapes must be multiples of the tiles."""
-    nr, d = Xr.shape
-    nc = Xc.shape[0]
-    assert nr % BLOCK_R == 0 and nc % BLOCK_C == 0, (nr, nc)
-    gamma = 1.0 / (2.0 * float(sigma) ** 2)
-    grid = (nr // BLOCK_R, nc // BLOCK_C)
-    return pl.pallas_call(
-        functools.partial(_rbf_block_kernel, gamma=gamma),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((nr, nc), jnp.float32),
-        interpret=interpret,
-    )(Xr, Xc)
+    return _pk.pairwise_block_padded(_rbf_spec(sigma), Xr, Xc,
+                                     interpret=interpret)
+
+
+def rbf_matmat_multi_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs,
+                            sigma: float, interpret: bool = False):
+    """[K(Xr, Xc) @ V for V in Vs] over padded inputs, one kernel launch."""
+    return _pk.pairwise_matmat_multi_padded(_rbf_spec(sigma), Xr, Xc, Vs,
+                                            interpret=interpret)
+
+
+def rbf_matmat_padded(Xr: jnp.ndarray, Xc: jnp.ndarray, V: jnp.ndarray,
+                      sigma: float, interpret: bool = False) -> jnp.ndarray:
+    """K(Xr, Xc) @ V over padded inputs; all dims must be tile multiples."""
+    (out,) = _pk.pairwise_matmat_multi_padded(_rbf_spec(sigma), Xr, Xc, (V,),
+                                              interpret=interpret)
+    return out

@@ -1,153 +1,57 @@
-"""Public jit'd wrappers for the fused RBF block kernels.
+"""Back-compat RBF wrappers over the generalized pairwise kernel template.
 
-Handles arbitrary (non-tile-aligned) shapes by zero-padding the point sets and
-slicing the output; padding rows produce garbage kernel values that are sliced
-away, never read.
-
-Backend selection (interpret mode on CPU containers, compiled on real TPU) is
-resolved at *call* time, not import time: each public wrapper reads
-``jax.default_backend()`` when invoked and threads the choice into the jit
-cache as a static argument, so flipping the backend after import (tests,
-multi-backend processes) can never run a stale interpret decision.
+The fused kernels were generalized into ``repro.kernels.pairwise`` (one tiled
+Pallas sweep template parameterized by a ``KernelSpec``); these wrappers keep
+the original RBF-specific signatures alive by binding the registry's ``rbf``
+spec.  Backend selection (interpret on CPU, compiled on TPU) stays resolved
+at *call* time via this module's ``_interpret_mode`` so tests and
+multi-backend processes can patch/flip it per call.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.rbf_sketch import kernel as _k
-from repro.kernels.rbf_sketch import ref as _ref
+from repro.kernels.pairwise import ops as _pw
+from repro.kernels.pairwise.specs import rbf as _rbf_spec
 
 
 def _interpret_mode() -> bool:
-    """CPU containers interpret the TPU kernel; real TPU compiles it.
-
-    A function (not a module constant) on purpose: the backend may be chosen
-    after this module is imported, so the decision must be re-read per call.
-    """
-    return jax.default_backend() != "tpu"
-
-
-def _pad_rows(X: jnp.ndarray, mult: int) -> jnp.ndarray:
-    n = X.shape[0]
-    pad = (-n) % mult
-    if pad == 0:
-        return X
-    return jnp.pad(X, ((0, pad), (0, 0)))
-
-
-def _pad_cols(V: jnp.ndarray, mult: int) -> jnp.ndarray:
-    m = V.shape[1]
-    pad = (-m) % mult
-    if pad == 0:
-        return V
-    return jnp.pad(V, ((0, 0), (0, pad)))
-
-
-@partial(jax.jit, static_argnames=("sigma", "use_pallas", "interpret"))
-def _rbf_block_jit(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float,
-                   use_pallas: bool, interpret: bool) -> jnp.ndarray:
-    if not use_pallas:
-        return _ref.rbf_block(Xr, Xc, sigma)
-    nr, nc = Xr.shape[0], Xc.shape[0]
-    Xrp = _pad_rows(Xr, _k.BLOCK_R)
-    Xcp = _pad_rows(Xc, _k.BLOCK_C)
-    out = _k.rbf_block_padded(Xrp, Xcp, sigma, interpret=interpret)
-    return out[:nr, :nc]
+    """CPU containers interpret the TPU kernel; real TPU compiles it."""
+    return _pw._interpret_mode()
 
 
 def rbf_block(Xr: jnp.ndarray, Xc: jnp.ndarray, sigma: float,
               use_pallas: bool = True) -> jnp.ndarray:
     """K-block exp(-|x_r - x_c|^2 / 2 sigma^2) of shape (len(Xr), len(Xc))."""
-    return _rbf_block_jit(Xr, Xc, sigma, use_pallas, _interpret_mode())
-
-
-@partial(jax.jit, static_argnames=("sigma", "use_pallas", "interpret"))
-def _rbf_matmat_jit(X: jnp.ndarray, V: jnp.ndarray, sigma: float,
-                    use_pallas: bool, interpret: bool) -> jnp.ndarray:
-    if not use_pallas:
-        return _ref.rbf_matmat(X, V, sigma)
-    n = X.shape[0]
-    squeeze = V.ndim == 1
-    V2 = V[:, None] if squeeze else V
-    m = V2.shape[1]
-    mult = max(_k.BLOCK_R, _k.BLOCK_C)
-    Xp = _pad_rows(X, mult)
-    Vp = _pad_cols(_pad_rows(V2, mult), 128)
-    out = _k.rbf_matmat_padded(Xp, Xp, Vp, sigma, interpret=interpret)
-    out = out[:n, :m]
-    return out[:, 0] if squeeze else out
+    return _pw.kernel_block(_rbf_spec(sigma), Xr, Xc, use_pallas=use_pallas,
+                            interpret=_interpret_mode())
 
 
 def rbf_matmat(X: jnp.ndarray, V: jnp.ndarray, sigma: float,
                use_pallas: bool = True) -> jnp.ndarray:
-    """K(X, X) @ V fused: kernel tiles never leave VMEM (streaming matmat).
-
-    Row/column point counts are zero-padded to tile multiples; padded columns
-    of K meet zero-padded rows of V, so their contribution vanishes, and
-    padded output rows are sliced away.
-    """
-    return _rbf_matmat_jit(X, V, sigma, use_pallas, _interpret_mode())
-
-
-@partial(jax.jit, static_argnames=("sigma", "use_pallas", "interpret"))
-def _rbf_matmat_multi_rows_jit(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs,
-                               sigma: float, use_pallas: bool,
-                               interpret: bool):
-    Vs = tuple(Vs)
-    if not use_pallas:
-        K = _ref.rbf_block(Xr, Xc, sigma)
-        return tuple(K @ V.astype(jnp.float32) for V in Vs)
-    nr = Xr.shape[0]
-    ms = [V.shape[1] for V in Vs]
-    Xrp = _pad_rows(Xr, _k.BLOCK_R)
-    Xcp = _pad_rows(Xc, _k.BLOCK_C)
-    Vps = tuple(_pad_cols(_pad_rows(V, _k.BLOCK_C), 128) for V in Vs)
-    outs = _k.rbf_matmat_multi_padded(Xrp, Xcp, Vps, sigma,
-                                      interpret=interpret)
-    return tuple(out[:nr, :m] for out, m in zip(outs, ms))
+    """K(X, X) @ V fused: kernel tiles never leave VMEM (streaming matmat)."""
+    return _pw.kernel_matmat(_rbf_spec(sigma), X, V, use_pallas=use_pallas,
+                             interpret=_interpret_mode())
 
 
 def rbf_matmat_multi_rows(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs, sigma: float,
                           use_pallas: bool = True):
-    """[K(Xr, Xc) @ V for V in Vs] — the rectangular row-slab fusion.
-
-    The shard_map fast path of the sweep engine: each device gathers its
-    contiguous local row slab ``Xr = X[r0:r1]`` (a row-offset slice of the
-    full point set) and passes the full column points ``Xc``, so only that
-    slab's (128 × 128) kernel tiles are ever computed — once, in VMEM — and
-    contracted against every right-hand side.  Rows of ``Xr`` are padded to
-    BLOCK_R, rows of ``Xc`` (and of each V, in lockstep) to BLOCK_C; padded
-    K columns meet zero-padded V rows, so their contribution vanishes.
-    """
-    return _rbf_matmat_multi_rows_jit(Xr, Xc, tuple(Vs), sigma, use_pallas,
-                                      _interpret_mode())
+    """[K(Xr, Xc) @ V for V in Vs] — the rectangular row-slab fusion."""
+    return _pw.kernel_matmat_multi_rows(_rbf_spec(sigma), Xr, Xc, Vs,
+                                        use_pallas=use_pallas,
+                                        interpret=_interpret_mode())
 
 
 def rbf_matmat_multi(X: jnp.ndarray, Vs, sigma: float,
                      use_pallas: bool = True):
-    """[K(X, X) @ V for V in Vs] with each kernel tile computed ONCE.
-
-    The sweep-engine fast path: all right-hand sides (projection sketches,
-    Hutchinson probes, one-hot column gathers for C = K P) are contracted
-    against the same VMEM-resident kernel tile in a single Pallas launch, so
-    the n×n entry evaluation is paid once for the whole product bundle.
-    The square special case of ``rbf_matmat_multi_rows``.
-    """
-    return rbf_matmat_multi_rows(X, X, Vs, sigma, use_pallas=use_pallas)
-
-
-@partial(jax.jit, static_argnames=("sigma", "interpret"))
-def _sketched_gram_jit(Xs: jnp.ndarray, sigma: float, scales, interpret):
-    blk = _rbf_block_jit(Xs, Xs, sigma, True, interpret)
-    if scales is not None:
-        blk = blk * (scales[:, None] * scales[None, :])
-    return blk
+    """[K(X, X) @ V for V in Vs] with each kernel tile computed ONCE."""
+    return _pw.kernel_matmat_multi(_rbf_spec(sigma), X, Vs,
+                                   use_pallas=use_pallas,
+                                   interpret=_interpret_mode())
 
 
 def sketched_gram(Xs: jnp.ndarray, sigma: float,
                   scales: jnp.ndarray | None = None) -> jnp.ndarray:
     """S^T K S for a column sketch S given the selected points Xs = X[idx]."""
-    return _sketched_gram_jit(Xs, sigma, scales, _interpret_mode())
+    return _pw.sketched_gram(_rbf_spec(sigma), Xs, scales=scales,
+                             interpret=_interpret_mode())

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke
-from repro.launch import mesh as mesh_lib
 from repro.launch.train import parse_mesh
 from repro.models.model import build_model
 

@@ -13,7 +13,6 @@ Step kinds:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

@@ -20,13 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import SHAPES, ShapeConfig, get_config, get_smoke
+from repro.configs import get_config, get_smoke
 from repro.data import make_pipeline
 from repro.distributed import sharding as shd
 from repro.launch import mesh as mesh_lib
-from repro.launch.steps import build_cell, make_train_step, default_optimizer
+from repro.launch.steps import make_train_step, default_optimizer
 from repro.models.model import build_model
-from repro.optim import make_gradient_compressor
 from repro.runtime import PreemptionHandler
 
 
@@ -59,7 +58,6 @@ def main(argv=None):
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     mesh = parse_mesh(args.mesh)
-    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
     model = build_model(cfg)
     opt = default_optimizer(cfg)
     step_fn = make_train_step(model, opt, peak_lr=args.peak_lr,

@@ -400,8 +400,6 @@ def _mla_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     K/V Gram — the architectural cousin of the paper's C = KP (DESIGN.md §5).
     """
     dt = cfg.cdtype
-    B = x.shape[0]
-    H = cfg.n_heads
     dn, dr, dv, R = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
                      cfg.kv_lora_rank)
     positions = pos[None]

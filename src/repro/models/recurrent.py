@@ -176,7 +176,6 @@ def mlstm_full(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
         gmax = jax.lax.cummax(g, axis=1)
         m_i = b + jnp.maximum(m_prev[:, None], gmax)         # (B,Lc,H)
         inter = jnp.exp(b + m_prev[:, None] - m_i)           # (B,Lc,H)
-        wsrc = jnp.exp(g - jnp.maximum(m_prev[:, None], gmax))  # (B,Lc,H)
 
         # intra: D_ij = exp(b_i + g_j - m_i) for j<=i
         Dij = jnp.exp(b[:, :, None] + g[:, None, :]

@@ -31,7 +31,7 @@ import dataclasses
 import signal
 import threading
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,4 @@
 """Unit tests for the roofline HLO miners and dry-run helpers."""
-import dataclasses
 
 import pytest
 

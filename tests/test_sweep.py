@@ -11,7 +11,9 @@ from repro.core import sketch as sk
 from repro.core import sweep as sw
 from repro.core.adaptive import _residual_column_norms, uniform_adaptive2_indices
 from repro.core.instrument import CountingOperator
-from repro.core.kernelop import RBFKernel
+from repro.core.kernelop import (DenseSPSD, LinearKernel, PairwiseKernel,
+                                 RBFKernel, SPSDOperator)
+from repro.kernels.pairwise import specs as pw_specs
 from repro.core.leverage import (column_leverage_scores_gram, pinv,
                                  row_leverage_scores, row_leverage_scores_gram)
 
@@ -206,6 +208,159 @@ def test_slab_hook_single_device_matches_scan():
                              [plan], block_size=64, slab_fn=slab_fn)
     np.testing.assert_allclose(np.asarray(got), Kd @ np.asarray(V),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# error_vs_best_rank_k: the first subspace-iteration matmat shares the
+# residual sweep (ROADMAP item: drop one of the 2 + power_iters passes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["blocked", "hutchinson"])
+def test_error_vs_best_rank_k_budget_shares_first_eig_pass(method):
+    """Y = K Ω rides the residual/probe sweep: (2 + power_iters) sweeps
+    total, not (3 + power_iters)."""
+    Kc = CountingOperator(_rbf(22))
+    ap = spsd.fast_model(Kc, jax.random.PRNGKey(0), c=20, s=80,
+                         s_sketch="gaussian", streaming=True)
+    Kc.reset()
+    rho = float(spsd.error_vs_best_rank_k(Kc, ap, k=8, method=method,
+                                          probes=16,
+                                          key=jax.random.PRNGKey(1)))
+    assert np.isfinite(rho) and rho > 0.0
+    assert Kc.counts["sweeps"] == 2 + 2      # fused first pass + 2 power + QKQ
+    assert Kc.counts["fulls"] == 0
+
+
+def test_error_vs_best_rank_k_shared_pass_matches_dense():
+    """Sharing the pass must not move the streaming estimate away from the
+    dense reference."""
+    Kop = _rbf(23)
+    ap = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=20, s=80,
+                         s_sketch="uniform")
+    dense = float(spsd.error_vs_best_rank_k(Kop, ap, k=8, method="dense"))
+    blocked = float(spsd.error_vs_best_rank_k(Kop, ap, k=8, method="blocked"))
+    assert blocked == pytest.approx(dense, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# columns(): the base default routes through a ColumnGatherPlan sweep;
+# pairwise kernels gather n×c entries straight from the data
+# ---------------------------------------------------------------------------
+
+class _BlockOnlyOperator(SPSDOperator):
+    """A minimal implicit operator: block() is the ONLY access pattern."""
+
+    def __init__(self, K):
+        self.K = K
+        self.block_elements = 0              # entries requested via block()
+
+    @property
+    def n(self):
+        return int(self.K.shape[0])
+
+    def block(self, row_idx, col_idx):
+        self.block_elements += int(row_idx.shape[0]) * int(col_idx.shape[0])
+        return jnp.take(jnp.take(self.K, row_idx, axis=0), col_idx, axis=1)
+
+
+def test_default_columns_routes_through_gather_sweep():
+    """The base-class gather sweeps the n×c selected-column view: correct
+    values, and only ~n·c entries requested (never b×n panels)."""
+    n = 217
+    Kd = np.asarray(_rbf(24, n=n).full(), np.float32)
+    op = _BlockOnlyOperator(jnp.asarray(Kd))
+    idx = jnp.asarray([3, 50, 216])
+    got = np.asarray(op.columns(idx))
+    np.testing.assert_allclose(got, Kd[:, np.asarray(idx)],
+                               rtol=1e-5, atol=1e-6)
+    # clamp padding can add at most one thin panel's worth of rows
+    bs = sw.resolved_block_size(n, 3, None)
+    assert op.block_elements <= (n + bs) * 3
+    assert op.block_elements < n * n
+
+
+def test_pairwise_columns_is_direct_nc_block():
+    """PairwiseKernel overrides the sweep default: an n×c gather stays one
+    direct block (no sweep, no n-length row index)."""
+    Kc = CountingOperator(_rbf(25))
+    idx = jnp.asarray([1, 7, 100])
+    C = Kc.columns(idx)
+    assert C.shape == (Kc.n, 3)
+    assert Kc.counts["columns"] == 1 and Kc.counts["sweeps"] == 0
+    assert Kc.counts["entries"] == Kc.n * 3
+
+
+# ---------------------------------------------------------------------------
+# LinearKernel / PairwiseKernel(linear) through the sweep engine
+# ---------------------------------------------------------------------------
+
+def _linear_pair(seed, n=260, d=6):
+    X = _clustered(seed, n=n, d=d)
+    return X, DenseSPSD(X @ X.T)
+
+
+def test_linear_kernel_fused_route_parity_vs_dense():
+    """PairwiseKernel(linear, use_pallas=True): matmul-shaped sweeps claim
+    the fused Pallas route and match DenseSPSD(X Xᵀ) to ≤ 1e-5."""
+    X, Kd = _linear_pair(30)
+    Kc = CountingOperator(PairwiseKernel(X, pw_specs.get_spec("linear"),
+                                         use_pallas=True))
+    V = jax.random.normal(jax.random.PRNGKey(1), (Kc.n, 5), jnp.float32)
+    cidx = jnp.asarray([2, 100, 259])
+    plans = lambda: [sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx)]
+    got = Kc.sweep(plans())
+    assert Kc.last_route == "pallas_fused"
+    assert Kc.counts["fused_sweeps"] == 1
+    ref = Kd.sweep(plans(), block_size=64)
+    for a, b in zip(got, ref):
+        scale = max(1.0, float(np.max(np.abs(np.asarray(b)))))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5 * scale)
+
+
+def test_linear_kernel_panel_route_parity_vs_dense():
+    """use_pallas=False: the same bundle walks the panel scan — and a
+    non-matmul plan forces the panel route even when fused-capable."""
+    X, Kd = _linear_pair(31)
+    Kp = CountingOperator(PairwiseKernel(X, pw_specs.get_spec("linear"),
+                                         use_pallas=False))
+    V = jax.random.normal(jax.random.PRNGKey(2), (Kp.n, 4), jnp.float32)
+    got = Kp.sweep([sw.MatmulPlan(V), sw.FrobeniusPlan()], block_size=64)
+    assert Kp.last_route == "panel" and Kp.counts["fused_sweeps"] == 0
+    ref = Kd.sweep([sw.MatmulPlan(V), sw.FrobeniusPlan()], block_size=64)
+    scale = max(1.0, float(np.max(np.abs(np.asarray(ref[0])))))
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
+                               rtol=1e-5, atol=1e-5 * scale)
+    assert float(got[1]) == pytest.approx(float(ref[1]), rel=1e-5)
+    Kf = CountingOperator(PairwiseKernel(X, pw_specs.get_spec("linear"),
+                                         use_pallas=True))
+    Kf.sweep([sw.MatmulPlan(V), sw.FrobeniusPlan()], block_size=64)
+    assert Kf.last_route == "panel"          # bundle not matmul-shaped
+
+
+def test_linear_kernel_masked_sketch_ragged_batch():
+    """Ragged LinearKernel batch: MaskedSketch keeps poisoned padding rows
+    out of Sᵀ K S, per-item results match the unpadded kernels."""
+    rng = np.random.default_rng(32)
+    n_valid = np.array([150, 200])
+    npad = 200
+    Xb = rng.normal(size=(2, npad, 6))
+    for b, nv in enumerate(n_valid):
+        Xb[b, nv:] = 99.0                    # poison the padding rows
+    Xb = jnp.asarray(Xb, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(33), 2)
+    bat = spsd.fast_model_batched(LinearKernel(Xb), keys, c=12, s=48,
+                                  s_sketch="gaussian",
+                                  n_valid=jnp.asarray(n_valid))
+    assert bat.C.shape == (2, npad, 12) and bat.U.shape == (2, 12, 12)
+    assert np.all(np.isfinite(np.asarray(bat.U)))
+    for b, nv in enumerate(n_valid):
+        np.testing.assert_array_equal(np.asarray(bat.C[b][nv:]), 0.0)
+        assert int(jnp.max(bat.P_indices[b])) < nv
+        Ktrue = LinearKernel(Xb[b, :nv])
+        ap = spsd.SPSDApprox(C=bat.C[b][:nv], U=bat.U[b])
+        err = float(spsd.relative_error(Ktrue, ap, method="dense"))
+        assert np.isfinite(err) and err < 0.5, (b, err)
 
 
 # ---------------------------------------------------------------------------

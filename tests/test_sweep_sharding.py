@@ -15,8 +15,10 @@ from repro.core import cur, spsd
 from repro.core import sweep as sw
 from repro.core.adaptive import uniform_adaptive2_indices
 from repro.core.instrument import CountingOperator
-from repro.core.kernelop import RBFKernel
+from repro.core.kernelop import PairwiseKernel, RBFKernel
 from repro.core.sweep import mesh_data_size
+from repro.kernels.pairwise import ref as pw_ref
+from repro.kernels.pairwise import specs as pw_specs
 
 multidevice = pytest.mark.skipif(
     len(jax.devices()) < 2,
@@ -239,6 +241,64 @@ def test_sharded_pallas_non_matmul_plans_fall_back_to_panels():
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ref[0]),
                                rtol=1e-4, atol=1e-4)
     assert float(got[1]) == pytest.approx(float(ref[1]), rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# the kernel-family guarantee (the PR-4 tentpole): EVERY registered spec
+# rides the fused shard_map × Pallas route with the PR-3 routing contracts
+# ---------------------------------------------------------------------------
+
+# shared registry-sweep parameterization (entries O(1) on N(0,1) data;
+# user-registered kernels fall back to factory defaults instead of erroring)
+_family_spec = pw_specs.suggested_spec
+
+
+def _parity(got, ref, tol=1e-5):
+    """max|got − ref| ≤ tol · max(1, max|ref|): tol-level parity relative to
+    the result scale (contractions reassociate f32 sums across shards)."""
+    got, ref = np.asarray(got), np.asarray(ref)
+    assert got.shape == ref.shape
+    scale = max(1.0, float(np.max(np.abs(ref))))
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol * scale)
+
+
+@multidevice
+@pytest.mark.parametrize("name", pw_specs.registered_kernels())
+def test_every_kernel_fused_sharded_parity_and_entries(name):
+    """Acceptance: each registered KernelSpec through the 8-device mesh must
+    (a) claim the fused route (last_route == 'pallas_fused_sharded'),
+    (b) match its dense ref.py oracle to ≤ 1e-5, and
+    (c) evaluate entry counts within one thin panel of the sequential sweep
+    — i.e. the PR-3 routing guarantees, kernel-family-wide."""
+    n, d = 413, 8
+    rng = np.random.default_rng(16)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    spec = _family_spec(name, d)
+    V = jnp.asarray(rng.normal(size=(n, 6)), jnp.float32)
+    cidx = jnp.asarray([0, n // 3, n - 1])
+    plans = lambda: [sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx)]
+
+    K_shd = CountingOperator(PairwiseKernel(X, spec, use_pallas=True))
+    got = K_shd.sweep(plans(), mesh=_mesh())
+    assert K_shd.last_route == "pallas_fused_sharded"
+    assert K_shd.counts["fused_sweeps"] == 1 and K_shd.counts["sweeps"] == 1
+
+    # (b) parity vs the kernel's independent dense oracle
+    Kd = np.asarray(pw_ref.kernel_block(spec, X, X))
+    _parity(got[0], Kd @ np.asarray(V))
+    _parity(got[1], Kd[:, np.asarray(cidx)])
+
+    # (c) metered entries within one thin panel of the sequential sweep
+    K_seq = CountingOperator(PairwiseKernel(X, spec, use_pallas=True))
+    K_seq.sweep(plans())
+    assert K_seq.last_route == "pallas_fused"
+    dp = len(jax.devices())
+    bs_seq = sw.resolved_block_size(n, n, None)
+    bs_shd = sw.resolved_block_size(n, n, None, dp)
+    one_panel = max(bs_seq, bs_shd) * n
+    assert abs(K_shd.counts["entries"] - K_seq.counts["entries"]) <= one_panel
+    assert K_shd.counts["entries"] == dp * sw.local_slab_rows(n, n, None,
+                                                              dp) * n
 
 
 @multidevice

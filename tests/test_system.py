@@ -16,6 +16,8 @@ def test_public_imports():
         "repro.launch.mesh", "repro.launch.steps", "repro.launch.roofline",
         "repro.kernels.flash_attention.ops",
         "repro.kernels.landmark_attention.ops",
+        "repro.kernels.pairwise.ops",
+        "repro.kernels.pairwise.specs",
         "repro.kernels.rbf_sketch.ops",
     ]:
         importlib.import_module(mod)

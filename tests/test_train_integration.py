@@ -54,8 +54,6 @@ def test_grad_accum_equivalence():
 
 
 def test_checkpoint_resume_bitwise(tmp_path):
-    model = build_model(CFG)
-    opt = adamw()
     params, opt_state, _ = _run(5)
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(5, {"params": params, "opt_m": opt_state.inner["m"],
