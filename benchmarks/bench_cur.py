@@ -4,6 +4,11 @@ A synthetic 'natural image' (smooth 2D field + oriented edges + texture,
 approximately low-rank like Fig. 2's photo) is decomposed with c=r=100 and
 the U matrix computed four ways: optimal (Eq. 8), drineas08 (P_R^T A P_C)^+,
 and fast (Eq. 9) at (sc, sr) = (2r, 2c) and (4r, 4c).
+
+``--streaming-selection`` benches the PR-5 selection subsystem instead:
+fully streaming C/R selection on an implicit kernel operator (every
+registered ``SelectionPolicy`` through ``fast_cur``), reporting wall time,
+metered sweeps/entries, and relative error per policy.
 """
 from __future__ import annotations
 
@@ -15,7 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import print_table
-from repro.core import cur
+from repro.core import cur, selection
+from repro.core.instrument import CountingOperator
+from repro.core.kernelop import RBFKernel
 
 
 def synth_image(h=960, w=584, seed=0):
@@ -68,11 +75,59 @@ def run(c=100, r=100, seed=0):
     return rows
 
 
+def run_streaming_selection(n=1500, c=48, sc=96, seed=0, mesh=None):
+    """Kernel CUR with streaming C/R selection, one row per policy.
+
+    The operator is an implicit RBF kernel (never densified); each
+    registered ``SelectionPolicy`` selects C and R through the operator
+    protocol, and ``CountingOperator`` meters the pass budget the policy
+    declared.  Relative error is measured against the materialized kernel
+    (bench-time only — n is CPU-sized).
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, 8)) * 2.5
+    X = jnp.asarray(centers[rng.integers(0, 8, size=n)]
+                    + rng.normal(size=(n, 8)) * 0.4, jnp.float32)
+    Kd = jnp.asarray(np.asarray(RBFKernel(X, sigma=2.0).full(), np.float32))
+    rows = []
+    for name in selection.registered_policies():
+        pol = selection.get_policy(name)
+        Kc = CountingOperator(RBFKernel(X, sigma=2.0))
+        t0 = time.perf_counter()
+        ap = cur.fast_cur(Kc, jax.random.PRNGKey(seed), c=c, r=c, sc=sc,
+                          sr=sc, sketch_kind="gaussian", selection=name,
+                          mesh=mesh)
+        jax.block_until_ready(ap.U)
+        dt = time.perf_counter() - t0
+        rows.append(dict(policy=name, seconds=round(dt, 3),
+                         sweeps=Kc.counts["sweeps"],
+                         declared=1 + 2 * pol.sweep_budget(),
+                         entries=Kc.counts["entries"],
+                         rel_err=float(cur.relative_error(Kd, ap))))
+    print_table(
+        f"streaming CUR selection (implicit RBF kernel, n={n}, c=r={c})",
+        ["policy", "s", "sweeps", "declared", "#K entries", "rel err"],
+        [(r["policy"], f"{r['seconds']:7.3f}", r["sweeps"], r["declared"],
+          f"{r['entries']:>12,}", f"{r['rel_err']:.5f}") for r in rows])
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--c", type=int, default=100)
+    p.add_argument("--c", type=int, default=None,
+                   help="columns/rows (default 100 for the image CUR, 48 "
+                        "for --streaming-selection)")
+    p.add_argument("--streaming-selection", action="store_true",
+                   help="bench the selection-policy registry on an implicit "
+                        "kernel operator instead of the dense image CUR")
+    p.add_argument("--n", type=int, default=1500,
+                   help="points for --streaming-selection")
     args = p.parse_args(argv)
-    run(c=args.c, r=args.c)
+    if args.streaming_selection:
+        c = 48 if args.c is None else args.c
+        return run_streaming_selection(n=args.n, c=c, sc=2 * c)
+    run(c=100 if args.c is None else args.c,
+        r=100 if args.c is None else args.c)
 
 
 if __name__ == "__main__":

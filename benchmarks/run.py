@@ -77,6 +77,9 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
     step("time_streaming",
          lambda: bench_time.main(["--ns", "400", "800", "--streaming"]))
     step("cur", lambda: bench_cur.main([]))
+    cur_selection = step(
+        "cur_streaming_selection",
+        lambda: bench_cur.run_streaming_selection(n=800, c=32, sc=64))
     kernels = step("kernels", lambda: bench_kernels.run())
 
     payload = {
@@ -87,6 +90,7 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
         "steps_seconds": steps,
         "scaling": scaling,
         "kernels": kernels,
+        "cur_streaming_selection": cur_selection,
     }
     out_dir = os.path.dirname(out)
     if out_dir:

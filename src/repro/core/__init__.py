@@ -12,6 +12,13 @@ from repro.core.sweep import (ColumnGatherPlan, DiagPlan, FrobeniusPlan,
                               SketchRightPlan, mesh_data_size, sweep_operator,
                               sweep_panels)
 from repro.core.instrument import CountingOperator
+from repro.core.selection import (LeveragePolicy, SelectionPolicy,
+                                  UniformAdaptive2Policy, UniformPolicy,
+                                  get_policy, register_policy,
+                                  registered_policies, residual_column_norms)
+# per-spec streaming calibration lives in repro.kernels.pairwise.calibrate
+# (NOT re-exported here: benchmarks/common.py has an unrelated eta-targeted
+# calibrate_sigma and the two must never be import-confused)
 from repro.core.leverage import (column_leverage_scores,
                                  column_leverage_scores_gram,
                                  orthonormal_basis, pinv, row_coherence,
@@ -22,8 +29,9 @@ from repro.core.sketch import (SKETCH_KINDS, ColumnSketch, CountSketch,
                                make_sketch, plan_for_sketch, right_streaming,
                                srht_sketch, subset_union_sketch, sym_streaming,
                                uniform_column_sketch)
-from repro.core.spsd import (SPSDApprox, error_vs_best_rank_k, fast_U,
-                             fast_model, fast_model_batched, fast_model_from_C,
+from repro.core.spsd import (SPSDApprox, bucket_by_size, error_vs_best_rank_k,
+                             fast_U, fast_model, fast_model_batched,
+                             fast_model_from_C, fast_model_ragged,
                              fast_model_with_error, nystrom_U, nystrom_model,
                              prototype_U, prototype_model, relative_error,
                              sample_C, streaming_topk_eigvals)

@@ -2,62 +2,34 @@
 
 Round 0: c/3 columns uniformly.  Rounds 1-2: c/3 columns each, sampled with
 probability proportional to the squared residual column norms
-||k_:j − C C† k_:j||² of the current sketch.
+||k_:j − C C† k_:j||² of the current sketch — ONE panel sweep per round via
+the projection identity (see ``repro.core.selection``).
 
-Each adaptive round costs ONE sweep of the panel engine: with Q an
-orthonormal basis of range(C) (an O(n·c²) SVD that touches no kernel
-entries), the residual norms decompose as
-
-    ||(I − Q Qᵀ) K e_j||² = ||K e_j||² − ||Qᵀ K e_j||²,
-
-so a single pass accumulating the per-column norms of K alongside Qᵀ K
-replaces PR 1's two passes per round (a streaming C† K matmat plus a
-residual-norm pass).  Pass a ``mesh`` to shard the sweep across devices.
+The implementation lives in the pluggable selection subsystem
+(``selection.UniformAdaptive2Policy``); this module keeps the historical
+entry points.  Since PR 5 the adaptive draws zero out already-selected
+indices and sample without replacement, so the returned index set is always
+duplicate-free (the old ``replace=True`` draw could duplicate a dominant
+residual column into C — wasted budget, rank-deficient C).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.kernelop import as_operator
-from repro.core.sweep import ProjResidualColNormPlan
-
-
-def _masked_orthonormal_basis(C: jnp.ndarray) -> jnp.ndarray:
-    """Left singular vectors of C with zero-σ columns zeroed out, so Q Qᵀ is
-    the orthogonal projector onto range(C) even when C is rank-deficient."""
-    C32 = C.astype(jnp.float32)
-    u, s, _ = jnp.linalg.svd(C32, full_matrices=False)
-    cutoff = max(C.shape) * jnp.finfo(jnp.float32).eps * jnp.max(s)
-    return u * (s > cutoff).astype(jnp.float32)[None, :]
+from repro.core import selection as selection_lib
+from repro.core.selection import (_masked_orthonormal_basis,  # noqa: F401
+                                  residual_column_norms)
 
 
 def _residual_column_norms(Kop, idx: jnp.ndarray, block_size=None,
                            mesh=None) -> jnp.ndarray:
-    """||(I − C C†) K||² column norms in one panel sweep."""
-    C = Kop.columns(idx)                       # n·c entries, not a sweep
-    Q = _masked_orthonormal_basis(C)
-    (norms,) = Kop.sweep([ProjResidualColNormPlan(Q)],
-                         block_size=block_size, mesh=mesh)
-    return norms
+    """||(I − C C†) K||² column norms in one panel sweep (back-compat name)."""
+    return residual_column_norms(Kop, idx, block_size=block_size, mesh=mesh)
 
 
 def uniform_adaptive2_indices(K, key: jax.Array, c: int, block_size=None,
                               mesh=None) -> jnp.ndarray:
-    """Return c column indices via uniform + two adaptive rounds."""
-    Kop = as_operator(K)
-    n = Kop.n
-    c0 = c - 2 * (c // 3)
-    c1 = c // 3
-    k0, k1, k2 = jax.random.split(key, 3)
-
-    idx = jax.random.choice(k0, n, shape=(c0,), replace=False)
-    for kk, extra in ((k1, c1), (k2, c1)):
-        if extra == 0:
-            continue
-        norms = _residual_column_norms(Kop, idx, block_size=block_size,
-                                       mesh=mesh)
-        p = norms / jnp.maximum(jnp.sum(norms), 1e-30)
-        new = jax.random.choice(kk, n, shape=(extra,), replace=True, p=p)
-        idx = jnp.concatenate([idx, new])
-    return idx
+    """Return c distinct column indices via uniform + two adaptive rounds."""
+    pol = selection_lib.UniformAdaptive2Policy()
+    return pol.select(K, key, c, block_size=block_size, mesh=mesh)

@@ -15,9 +15,10 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import selection as selection_lib
 from repro.core import sketch as sk
 from repro.core import sweep as sweep_lib
-from repro.core.kernelop import SPSDOperator
+from repro.core.kernelop import SPSDOperator, as_operator
 from repro.core.leverage import (column_leverage_scores_gram, pinv,
                                  row_leverage_scores, row_leverage_scores_gram)
 
@@ -61,16 +62,36 @@ class CURApprox(NamedTuple):
         return self.C @ self.U @ self.R
 
 
-def select_cur_sketches(A, key: jax.Array, c: int, r: int):
-    """Uniformly sample columns/rows (the paper's §5.3 setup).
+def select_cur_sketches(A, key: jax.Array, c: int, r: int,
+                        selection="uniform", block_size: int = 1024,
+                        mesh=None):
+    """Sample the columns/rows forming C and R (the paper's §5.3 setup).
 
     ``A`` may be dense or an implicit ``SPSDOperator`` (kernel CUR): only the
-    selected n×c / r×n panels are ever materialized.
+    selected n×c / r×n panels are ever materialized.  ``selection`` names a
+    registered ``SelectionPolicy`` (``repro.core.selection``); non-uniform
+    policies need a square (SPSD) ``A`` — for an implicit operator the
+    leverage/adaptive statistics stream through the operator protocol
+    (blocked-Gram pilot leverage, ``ProjResidualColNorm`` sweeps), so C/R
+    selection never materializes an O(n·r) intermediate beyond the C and R
+    panels themselves.
     """
     kc, kr = jax.random.split(key)
     m, n = _shape_of(A)
-    cidx = jax.random.choice(kc, n, shape=(c,), replace=False)
-    ridx = jax.random.choice(kr, m, shape=(r,), replace=False)
+    pol = selection_lib.get_policy(selection)
+    if pol.name == "uniform":
+        cidx = jax.random.choice(kc, n, shape=(c,), replace=False)
+        ridx = jax.random.choice(kr, m, shape=(r,), replace=False)
+    else:
+        if m != n:
+            raise ValueError(
+                f"selection policy {pol.name!r} scores columns of a square "
+                f"SPSD A; got shape {(m, n)} — use selection='uniform' for "
+                f"rectangular matrices")
+        # one call for both sides: policies with shareable scores (leverage
+        # on a symmetric operator) pay for their pilot/scoring pass once
+        cidx, ridx = pol.select_pair(as_operator(A), kc, c, r,
+                                     block_size=block_size, mesh=mesh)
     return _cols_of(A, cidx), _rows_of(A, ridx), cidx, ridx
 
 
@@ -138,16 +159,24 @@ def fast_cur(
     streaming: bool = False,
     block_size: int = 1024,
     mesh=None,
+    selection="uniform",
 ) -> CURApprox:
-    """End-to-end fast CUR: uniform C/R, then the sketched Ũ (Thm 9 setup).
+    """End-to-end fast CUR: select C/R, then the sketched Ũ (Thm 9 setup).
 
+    ``selection`` picks WHICH columns/rows form C and R through the
+    ``SelectionPolicy`` registry (uniform / leverage / uniform_adaptive2 /
+    custom); for an implicit operator every policy statistic streams —
+    leverage via the blocked-Gram pilot pass, adaptive residual norms via
+    ``ProjResidualColNormPlan`` sweeps — adding exactly the policy's declared
+    sweeps and nothing else to the PR 2/3 pass budget.
     Column-selection sketches observe only an (sc × sr) block of A plus C and R.
     Leverage sampling uses row scores of C (for S_C) and of R^T (for S_R).
     With ``streaming=True`` everything routes through the sweep engine:
     S_C^T A S_R via ``blocked_right_sketch`` (no transposed full-size
     temporaries), and the R-side leverage scores via the blocked Gram R Rᵀ
     pass (``column_leverage_scores_gram``) instead of densifying the n×r
-    transpose — the path that survives n ≫ 10⁵.  ``mesh`` shards the sweeps.
+    transpose — the path that survives n ≫ 10⁵.  ``mesh`` shards the sweeps
+    (selection included).
 
     ``A`` may also be an implicit ``SPSDOperator`` (kernel CUR): every access
     goes through the operator protocol — C/R/blocks are gathered panels, and
@@ -159,7 +188,8 @@ def fast_cur(
     streaming = streaming or is_op
     m, n = _shape_of(A)
     kcr, kc, kr = jax.random.split(key, 3)
-    C, R, cidx, ridx = select_cur_sketches(A, kcr, c, r)
+    C, R, cidx, ridx = select_cur_sketches(A, kcr, c, r, selection=selection,
+                                           block_size=block_size, mesh=mesh)
 
     if sketch_kind in ("uniform", "leverage"):
         if sketch_kind == "leverage":

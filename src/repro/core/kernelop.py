@@ -250,6 +250,14 @@ class PairwiseKernel(SPSDOperator):
         # statistics, row norms through entry_fn for the dot statistic).
         return pairwise_specs.diag(self.spec, self.X)
 
+    def stat_operator(self) -> "PairwiseKernel":
+        """Operator over the RAW pairwise statistic (identity entry
+        function) — what per-spec bandwidth calibration quantiles stream
+        from (``repro.kernels.pairwise.calibrate``).  Shares this operator's
+        data, Pallas routing, and sweep machinery."""
+        return PairwiseKernel(self.X, pairwise_specs.stat_only(self.spec),
+                              self.use_pallas)
+
     # -- fused-sweep capability (sweep.sweep_operator routes through these) --
 
     def supports_fused_matmat(self) -> bool:

@@ -1,0 +1,335 @@
+"""Streaming column/row selection policies (the SelectionPolicy registry).
+
+Which columns enter C (and rows enter R, for CUR) dominates Nyström/prototype
+accuracy (Gittens & Mahoney 2013; Wang & Zhang 2014), yet selection is only
+*linear-time* if it costs no more kernel-entry passes than the sketch itself.
+This module gives selection the same pluggable, sweep-metered treatment the
+kernels got: a ``SelectionPolicy`` declares its per-round sweep budget up
+front, performs every kernel access through the operator protocol (``columns``
+gathers + panel-engine ``sweep``s — never ``full()``), and is registered by
+name so ``fast_model`` / ``fast_model_batched`` / ``fast_cur`` pick any policy
+up with a ``selection=`` string and zero call-site changes.
+
+Built-in policies (budgets are *exact* — asserted by ``CountingOperator``
+regression tests in ``tests/test_sweep.py``):
+
+=================  ======  ===============  ========  =======================
+policy             rounds  sweeps / round   gathers   selection rule
+=================  ======  ===============  ========  =======================
+uniform            1       0                0         uniform w/o replacement
+leverage           1       0                1 pilot   p_i ∝ approx leverage of
+                                                      a uniform n×p pilot
+                                                      panel (blocked Gram)
+uniform_adaptive2  2       1                2         round 0 uniform, then
+                                                      p_j ∝ residual column
+                                                      norms (one
+                                                      ``ProjResidualColNorm``
+                                                      sweep per round)
+=================  ======  ===============  ========  =======================
+
+Every policy samples **without replacement** and zeroes the probabilities of
+already-selected indices between adaptive rounds, so the returned index set is
+always duplicate-free (duplicated columns waste budget and make C rank
+deficient — the PR-5 bugfix).  ``mask`` restricts selection to the valid rows
+of a padded (ragged-batch) operator; all sampling and residual statistics are
+masked consistently.
+
+Registering a custom policy::
+
+    from repro.core import selection
+
+    @selection.register_policy("first_k")
+    def first_k() -> selection.SelectionPolicy:
+        class FirstK(selection.SelectionPolicy):
+            name, rounds, sweeps_per_round, gathers = "first_k", 1, 0, 0
+            def select(self, K, key, c, **kw):
+                return jnp.arange(c)
+        return FirstK()
+
+    ap = spsd.fast_model(K, key, c=100, s=400, selection="first_k")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sweep as sweep_lib
+from repro.core.kernelop import as_operator
+from repro.core.leverage import row_leverage_scores_gram
+
+
+class SelectionPolicy:
+    """Protocol: pick ``c`` column indices of a square SPSD operator.
+
+    Subclasses declare their kernel-access budget as class/instance fields —
+    ``rounds`` (selection rounds that touch the kernel), ``sweeps_per_round``
+    (panel-engine passes each such round costs), and ``gathers`` (n×c-panel
+    ``columns`` gathers beyond the C panel the caller extracts) — and MUST
+    meet it exactly: the budget regression tests meter every policy with
+    ``CountingOperator``.
+    """
+
+    name: str = "?"
+    rounds: int = 1
+    sweeps_per_round: int = 0
+    gathers: int = 0
+
+    def sweep_budget(self) -> int:
+        """Total declared panel-engine sweeps for one ``select`` call."""
+        return self.rounds * self.sweeps_per_round
+
+    def select(self, K, key: jax.Array, c: int, *,
+               block_size: Optional[int] = None, mesh=None,
+               mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Return ``c`` distinct column indices of ``K`` (mask-aware)."""
+        raise NotImplementedError
+
+    def select_pair(self, K, key: jax.Array, c: int, r: int, *,
+                    block_size: Optional[int] = None, mesh=None,
+                    mask: Optional[jnp.ndarray] = None):
+        """Two independent index sets from one call (CUR's C and R sides).
+
+        The default is two ``select`` calls — 2× the declared budget.
+        Policies whose scores serve both sides of a symmetric operator
+        (leverage) override this to share the scoring pass.
+        """
+        kc, kr = jax.random.split(key)
+        kw = dict(block_size=block_size, mesh=mesh, mask=mask)
+        return self.select(K, kc, c, **kw), self.select(K, kr, r, **kw)
+
+
+def _uniform_indices(key: jax.Array, n: int, count: int,
+                     mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Uniform sampling without replacement, restricted to ``mask``'s valid
+    rows when given (p_i = 1/n_valid) — the historical ``fast_model`` P
+    sampler, kept bit-identical so default seeds are unchanged."""
+    if mask is None:
+        return jax.random.choice(key, n, shape=(count,), replace=False)
+    return jax.random.choice(key, n, shape=(count,), replace=False,
+                             p=mask / jnp.sum(mask))
+
+
+def _weighted_indices_without_replacement(
+        key: jax.Array, weights: jnp.ndarray, count: int,
+        allowed: jnp.ndarray) -> jnp.ndarray:
+    """Sample ``count`` distinct indices with p ∝ ``weights`` on ``allowed``.
+
+    Disallowed indices get exactly zero probability.  A tiny relative floor is
+    added on the allowed set so the support never collapses below ``count``
+    nonzero entries (e.g. residual weights that are exactly zero once C spans
+    the whole column space fall back to uniform-over-allowed).
+    """
+    allowed = allowed.astype(jnp.float32)
+    w = jnp.maximum(weights.astype(jnp.float32), 0.0) * allowed
+    floor = (1e-9 * jnp.max(w) + 1e-30) * allowed
+    p = w + floor
+    return jax.random.choice(key, w.shape[0], shape=(count,), replace=False,
+                             p=p / jnp.sum(p))
+
+
+@dataclasses.dataclass
+class UniformPolicy(SelectionPolicy):
+    """Uniform sampling without replacement — 0 sweeps, 0 gathers."""
+
+    name: str = "uniform"
+    rounds: int = 1
+    sweeps_per_round: int = 0
+    gathers: int = 0
+
+    def select(self, K, key, c, *, block_size=None, mesh=None, mask=None):
+        return _uniform_indices(key, as_operator(K).n, c, mask)
+
+
+@dataclasses.dataclass
+class LeveragePolicy(SelectionPolicy):
+    """Approximate-leverage column sampling from a uniform pilot panel.
+
+    A uniform pilot of ``p = min(n, max(2c, c + oversample))`` columns is
+    gathered (ONE n×p ``columns`` call — the only kernel access), its row
+    leverage scores are computed by the blocked Gram pass
+    (``row_leverage_scores_gram``: O(b·p + p²) peak memory, never an n×p
+    transposed copy or SVD workspace), and ``c`` columns are drawn without
+    replacement with p_i ∝ those scores.  For an SPSD K the row and column
+    leverage of the pilot panel agree, so the same policy serves CUR's row
+    side.  Kernel sweep budget: 0 (the Gram/quad-form passes stream over the
+    already-materialized pilot panel, not over K).
+    """
+
+    name: str = "leverage"
+    rounds: int = 1
+    sweeps_per_round: int = 0
+    gathers: int = 1
+    pilot: Optional[int] = None     # pilot panel width (default max(2c, c+8))
+    oversample: int = 8
+
+    def _pilot_scores(self, Kop, kp: jax.Array, c: int,
+                      mask, block_size, mesh) -> jnp.ndarray:
+        """Approximate leverage scores from one uniform n×p pilot gather."""
+        n = Kop.n
+        p = self.pilot if self.pilot is not None else max(2 * c,
+                                                          c + self.oversample)
+        p = min(n, int(p))
+        if mask is not None:
+            # A masked operator has only n_valid real columns; a pilot wider
+            # than that would pull zero-probability padding columns into the
+            # panel (jax.random.choice(replace=False) falls back to them
+            # silently) and corrupt every valid row's leverage score.  Clamp
+            # the width when the count is concrete; under a traced mask
+            # (vmapped ragged batches) the width is static, so remap any
+            # overflow pick onto a valid column instead (duplicated pilot
+            # columns only double-count in the Gram — padding never enters).
+            nv = jnp.sum(mask)
+            if not isinstance(nv, jax.core.Tracer):
+                p = min(p, int(nv))
+            pilot_idx = _uniform_indices(kp, n, p, mask)
+            repl = jax.random.choice(jax.random.fold_in(kp, 1), n,
+                                     shape=(p,), replace=True,
+                                     p=mask / nv)
+            pilot_idx = jnp.where(jnp.take(mask, pilot_idx) > 0,
+                                  pilot_idx, repl)
+        else:
+            pilot_idx = _uniform_indices(kp, n, p, None)
+        Cp = Kop.columns(pilot_idx)
+        if mask is not None:
+            Cp = Cp * mask[:, None]
+        return row_leverage_scores_gram(Cp, block_size=block_size, mesh=mesh)
+
+    @staticmethod
+    def _allowed(n: int, mask) -> jnp.ndarray:
+        return jnp.ones((n,), jnp.float32) if mask is None \
+            else mask.astype(jnp.float32)
+
+    def select(self, K, key, c, *, block_size=None, mesh=None, mask=None):
+        Kop = as_operator(K)
+        kp, ks = jax.random.split(key)
+        lev = self._pilot_scores(Kop, kp, c, mask, block_size, mesh)
+        return _weighted_indices_without_replacement(
+            ks, lev, c, self._allowed(Kop.n, mask))
+
+    def select_pair(self, K, key, c, r, *, block_size=None, mesh=None,
+                    mask=None):
+        """Both CUR sides from ONE pilot: for an SPSD operator the pilot
+        panel's row and column leverage agree, so scoring twice would only
+        duplicate the n×p gather and its Gram pass."""
+        Kop = as_operator(K)
+        kp, kc, kr = jax.random.split(key, 3)
+        lev = self._pilot_scores(Kop, kp, max(c, r), mask, block_size, mesh)
+        allowed = self._allowed(Kop.n, mask)
+        return (_weighted_indices_without_replacement(kc, lev, c, allowed),
+                _weighted_indices_without_replacement(kr, lev, r, allowed))
+
+
+def _masked_orthonormal_basis(C: jnp.ndarray) -> jnp.ndarray:
+    """Left singular vectors of C with zero-σ columns zeroed out, so Q Qᵀ is
+    the orthogonal projector onto range(C) even when C is rank-deficient."""
+    C32 = C.astype(jnp.float32)
+    u, s, _ = jnp.linalg.svd(C32, full_matrices=False)
+    cutoff = max(C.shape) * jnp.finfo(jnp.float32).eps * jnp.max(s)
+    return u * (s > cutoff).astype(jnp.float32)[None, :]
+
+
+def residual_column_norms(Kop, idx: jnp.ndarray,
+                          block_size: Optional[int] = None, mesh=None,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """||(I − C C†) K||² column norms in ONE panel sweep (adaptive rounds).
+
+    ``mask`` row-masks both the C panel and the sweep statistics, so padded
+    operators never leak padding rows into the norms.
+    """
+    C = Kop.columns(idx)                       # n·c entries, not a sweep
+    if mask is not None:
+        C = C * mask[:, None]
+    Q = _masked_orthonormal_basis(C)
+    (norms,) = Kop.sweep([sweep_lib.ProjResidualColNormPlan(Q, mask)],
+                         block_size=block_size, mesh=mesh)
+    return norms
+
+
+@dataclasses.dataclass
+class UniformAdaptive2Policy(SelectionPolicy):
+    """uniform + adaptive² (Wang, Luo, Zhang 2016): round 0 uniform, then
+    ``adaptive_rounds`` rounds with p_j ∝ squared residual column norms
+    ``||k_:j − C C† k_:j||²`` of the running sketch — ONE panel sweep per
+    adaptive round via the projection identity
+    ``||(I − QQᵀ) K e_j||² = ||K e_j||² − ||Qᵀ K e_j||²``.
+
+    Already-selected indices get their probabilities zeroed before each draw
+    and rounds sample WITHOUT replacement: the pre-PR-5 ``replace=True`` draw
+    could hand the same dominant residual column to every slot of a round
+    (duplicated columns in C — wasted budget, rank-deficient C).
+    """
+
+    name: str = "uniform_adaptive2"
+    sweeps_per_round: int = 1
+    adaptive_rounds: int = 2
+
+    @property
+    def rounds(self) -> int:            # sweep-costing rounds == adaptive ones
+        return self.adaptive_rounds
+
+    @property
+    def gathers(self) -> int:           # one C gather per adaptive round
+        return self.adaptive_rounds
+
+    def select(self, K, key, c, *, block_size=None, mesh=None, mask=None):
+        Kop = as_operator(K)
+        n = Kop.n
+        extra = c // (self.adaptive_rounds + 1)
+        if extra == 0:
+            # Silently degrading to pure uniform would break the declared
+            # sweep_budget() contract every metered caller relies on.
+            raise ValueError(
+                f"uniform_adaptive2 needs c ≥ {self.adaptive_rounds + 1} so "
+                f"each adaptive round draws at least one column (got c={c}); "
+                f"use selection='uniform' for smaller sketches")
+        c0 = c - self.adaptive_rounds * extra
+        keys = jax.random.split(key, self.adaptive_rounds + 1)
+        idx = _uniform_indices(keys[0], n, c0, mask)
+        valid = jnp.ones((n,), jnp.float32) if mask is None \
+            else mask.astype(jnp.float32)
+        for kk in keys[1:]:
+            norms = residual_column_norms(Kop, idx, block_size=block_size,
+                                          mesh=mesh, mask=mask)
+            selected = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+            new = _weighted_indices_without_replacement(
+                kk, norms, extra, valid * (1.0 - selected))
+            idx = jnp.concatenate([idx, new])
+        return idx
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_POLICIES: Dict[str, Callable[..., SelectionPolicy]] = {}
+
+
+def register_policy(name: str):
+    """Decorator: register a ``SelectionPolicy`` factory under ``name``."""
+    def deco(factory: Callable[..., SelectionPolicy]):
+        _POLICIES[name] = factory
+        return factory
+    return deco
+
+
+def get_policy(policy, **params) -> SelectionPolicy:
+    """Resolve a policy name (or pass a ``SelectionPolicy`` through)."""
+    if isinstance(policy, SelectionPolicy):
+        return policy
+    if policy not in _POLICIES:
+        raise ValueError(f"unknown selection policy {policy!r}; registered: "
+                         f"{registered_policies()}")
+    return _POLICIES[policy](**params)
+
+
+def registered_policies() -> Tuple[str, ...]:
+    """Registered policy names, sorted (the test/benchmark sweep order)."""
+    return tuple(sorted(_POLICIES))
+
+
+register_policy("uniform")(UniformPolicy)
+register_policy("leverage")(LeveragePolicy)
+register_policy("uniform_adaptive2")(UniformAdaptive2Policy)

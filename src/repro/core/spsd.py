@@ -27,6 +27,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import selection as selection_lib
 from repro.core import sketch as sk
 from repro.core import sweep as sweep_lib
 from repro.core.kernelop import DenseSPSD, SPSDOperator, as_operator
@@ -178,14 +179,6 @@ def fast_model_from_C(
     return SPSDApprox(C=C, U=U, P_indices=P_indices)
 
 
-def _sample_P_indices(key: jax.Array, n: int, c: int,
-                      mask: Optional[jnp.ndarray]) -> jnp.ndarray:
-    if mask is None:
-        return jax.random.choice(key, n, shape=(c,), replace=False)
-    return jax.random.choice(key, n, shape=(c,), replace=False,
-                             p=mask / jnp.sum(mask))
-
-
 def fast_model(
     K,
     key: jax.Array,
@@ -198,21 +191,28 @@ def fast_model(
     block_size: Optional[int] = None,
     mesh=None,
     n_valid=None,
+    selection="uniform",
 ) -> SPSDApprox:
-    """Algorithm 1 end-to-end: uniform C = KP, then the fast U.
+    """Algorithm 1 end-to-end: select C = KP columns, then the fast U.
 
+    ``selection`` names a registered ``SelectionPolicy`` (``uniform``,
+    ``leverage``, ``uniform_adaptive2``, or a policy instance) that picks
+    WHICH columns form C; every policy meets a declared kernel-sweep budget
+    and streams through the operator protocol (``repro.core.selection``).
     With a projection ``s_sketch`` on a streaming operator, the C gather and
     the K @ S product ride the SAME panel sweep — every kernel row panel is
     evaluated exactly once for the whole model (PR-1 paid one extra n×c
-    evaluation plus a separate sweep).  ``mesh`` shards that sweep;
-    ``n_valid`` handles padded (ragged-batch) operators.
+    evaluation plus a separate sweep).  ``mesh`` shards every sweep the model
+    AND the selection policy run; ``n_valid`` handles padded (ragged-batch)
+    operators — the mask restricts the policy to valid rows too.
     """
     Kop = as_operator(K)
     n = Kop.n
     kc, ks = jax.random.split(key)
     mask = None if n_valid is None else \
         (jnp.arange(n) < n_valid).astype(jnp.float32)
-    idx = _sample_P_indices(kc, n, c, mask)
+    pol = selection_lib.get_policy(selection)
+    idx = pol.select(Kop, kc, c, block_size=block_size, mesh=mesh, mask=mask)
 
     if streaming is None:
         streaming = not isinstance(Kop, DenseSPSD)
@@ -252,6 +252,7 @@ def fast_model_with_error(
     block_size: Optional[int] = None,
     mesh=None,
     error_key: Optional[jax.Array] = None,
+    selection="uniform",
 ) -> Tuple[SPSDApprox, jnp.ndarray]:
     """Algorithm 1 + its Hutchinson relative error in ONE panel sweep.
 
@@ -259,14 +260,17 @@ def fast_model_with_error(
     sweep that gathers C and applies the projection sketch: the whole
     model-plus-evaluation pipeline reads each kernel row panel exactly once
     (PR 1 used one sweep for the model and another for the error — plus two
-    more per adaptive round).  Returns ``(approx, relative_error)`` with the
-    same estimator as ``relative_error(method="hutchinson")``.
+    more per adaptive round).  ``selection`` picks the policy that chooses
+    C's columns (its declared sweeps are the only addition to the budget).
+    Returns ``(approx, relative_error)`` with the same estimator as
+    ``relative_error(method="hutchinson")``.
     """
     Kop = as_operator(K)
     n = Kop.n
     kc, ks = jax.random.split(key)
     kz = jax.random.fold_in(key, 777) if error_key is None else error_key
-    idx = _sample_P_indices(kc, n, c, None)
+    pol = selection_lib.get_policy(selection)
+    idx = pol.select(Kop, kc, c, block_size=block_size, mesh=mesh)
     Z = jax.random.rademacher(kz, (n, probes), dtype=jnp.float32)
 
     if s_sketch in ("uniform", "leverage"):
@@ -300,6 +304,7 @@ def fast_model_batched(
     streaming: Optional[bool] = None,
     block_size: Optional[int] = None,
     n_valid: Optional[jnp.ndarray] = None,
+    selection="uniform",
 ) -> SPSDApprox:
     """Algorithm 1 vmapped over a batch of kernels.
 
@@ -310,12 +315,16 @@ def fast_model_batched(
     are stacked along the batch axis.  Whole-batch work runs in one XLA
     computation, so many moderate kernels (hyperparameter sweeps, per-class
     Gram matrices) amortize compilation and saturate the accelerator.
+    ``selection`` picks the C-column policy per item (the whole policy —
+    pilot gathers, residual-norm sweeps — traces under the vmap).
 
     Ragged batches: zero-pad each kernel's data to a common n and pass
     ``n_valid`` of shape (B,) with the true sizes.  Sampling is restricted to
     valid rows, C's padding rows are zeroed, and projection sketches are
     row-masked (``sketch.MaskedSketch``), so Sᵀ K S never observes a padding
-    entry and the per-item results match unpadded runs.
+    entry and the per-item results match unpadded runs.  ``fast_model_ragged``
+    adds automatic size-bucketing on top so wildly mixed sizes don't all pay
+    the largest item's padding.
     """
     if not isinstance(Ks, SPSDOperator):
         Ks = DenseSPSD(jnp.asarray(Ks))
@@ -324,11 +333,76 @@ def fast_model_batched(
         return fast_model(op, key, c=c, s=s, s_sketch=s_sketch,
                           enforce_subset=enforce_subset, scale=scale,
                           streaming=streaming, block_size=block_size,
-                          n_valid=nv)
+                          n_valid=nv, selection=selection)
 
     if n_valid is None:
         return jax.vmap(lambda op, key: one(op, key, None))(Ks, keys)
     return jax.vmap(one)(Ks, keys, jnp.asarray(n_valid))
+
+
+def bucket_by_size(sizes, waste: float = 0.25):
+    """Greedy size-bucketing for ragged batches: index groups whose padded
+    height stays within ``(1 + waste)×`` each member's true size.
+
+    Items are visited in descending size order and join the current bucket
+    while the bucket's padded height (its largest member) costs them at most
+    a ``waste`` fraction of padding rows; otherwise a new bucket opens.  So
+    every item's padding overhead is bounded by ``waste`` and the number of
+    vmapped computations stays minimal for that bound.
+    """
+    order = sorted(range(len(sizes)), key=lambda i: -int(sizes[i]))
+    buckets, cur, cap = [], [], 0
+    for i in order:
+        n_i = int(sizes[i])
+        if cur and cap > n_i * (1.0 + waste):
+            buckets.append(cur)
+            cur = []
+        if not cur:
+            cap = n_i
+        cur.append(i)
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def fast_model_ragged(
+    Xs,
+    make_operator,
+    keys: jax.Array,
+    c: int,
+    s: int,
+    waste: float = 0.25,
+    **kwargs,
+):
+    """Algorithm 1 over a ragged list of datasets with automatic bucketing.
+
+    ``Xs`` is a list of (n_i, d) data arrays (different n_i), and
+    ``make_operator`` maps a stacked (B, n_pad, d) array to a batched
+    operator pytree (e.g. ``lambda Xb: RBFKernel(Xb, sigma=1.5)``).  Items
+    are grouped by ``bucket_by_size(..., waste)``, zero-padded only to their
+    bucket's height, and each bucket runs one ``fast_model_batched`` call
+    with the true sizes as ``n_valid`` — bounding padding waste at ``waste``
+    instead of padding everything to the global maximum.  Extra ``kwargs``
+    (``s_sketch``, ``selection``, …) pass through.  Returns a list of
+    per-item ``SPSDApprox`` with C trimmed back to each item's true n,
+    ordered like ``Xs``.
+    """
+    sizes = [int(x.shape[0]) for x in Xs]
+    out = [None] * len(Xs)
+    for bucket in bucket_by_size(sizes, waste):
+        npad = max(sizes[i] for i in bucket)
+        Xb = jnp.stack([jnp.pad(jnp.asarray(Xs[i]),
+                                ((0, npad - sizes[i]), (0, 0)))
+                        for i in bucket])
+        kb = jnp.stack([keys[i] for i in bucket])
+        nv = jnp.asarray([sizes[i] for i in bucket])
+        bat = fast_model_batched(make_operator(Xb), kb, c=c, s=s,
+                                 n_valid=nv, **kwargs)
+        for j, i in enumerate(bucket):
+            P = None if bat.P_indices is None else bat.P_indices[j]
+            out[i] = SPSDApprox(C=bat.C[j][: sizes[i]], U=bat.U[j],
+                                P_indices=P)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -262,16 +262,20 @@ class ProjResidualColNormPlan:
     ||(I − QQᵀ) K e_j||² = ||K e_j||² − ||Qᵀ K e_j||², so one sweep
     accumulating per-column norms of K alongside the (q × ncols) product
     Qᵀ K replaces PR 1's matmat pass + residual pass per adaptive round.
+
+    ``mask`` (optional, (nrows,)) row-masks the statistics so padded
+    (ragged-batch) operators never leak padding rows into the norms.
     """
 
     Q: jnp.ndarray           # (nrows, q) f32, orthonormal (masked) columns
+    mask: Optional[jnp.ndarray] = None   # (nrows,) 1.0 valid / 0.0 padding
 
     def tree_flatten(self):
-        return (self.Q,), ()
+        return (self.Q, self.mask), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(children[0])
+        return cls(*children)
 
     def init(self, nrows: int, ncols: int):
         return (jnp.zeros((ncols,), jnp.float32),
@@ -279,7 +283,10 @@ class ProjResidualColNormPlan:
 
     def update(self, carry, panel, idx, valid):
         colnorms, QtK = carry
-        p32 = panel.astype(jnp.float32) * valid.astype(jnp.float32)[:, None]
+        rowm = valid.astype(jnp.float32)
+        if self.mask is not None:
+            rowm = rowm * jnp.take(self.mask.astype(jnp.float32), idx)
+        p32 = panel.astype(jnp.float32) * rowm[:, None]
         colnorms = colnorms + jnp.sum(p32 * p32, axis=0)
         QtK = QtK + jnp.take(self.Q, idx, axis=0).T @ p32
         return (colnorms, QtK)

@@ -1,4 +1,8 @@
 from repro.kernels.pairwise import kernel, ops, ref, specs  # noqa: F401
 from repro.kernels.pairwise.specs import (KernelSpec, get_spec,  # noqa: F401
                                           register_kernel,
-                                          registered_kernels)
+                                          registered_kernels, stat_only)
+from repro.kernels.pairwise import calibrate  # noqa: F401
+from repro.kernels.pairwise.calibrate import (calibrate_sigma,  # noqa: F401
+                                              register_calibration,
+                                              stat_quantile)

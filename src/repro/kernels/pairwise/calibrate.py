@@ -1,0 +1,177 @@
+"""Per-``KernelSpec`` streaming bandwidth calibration (median-heuristic family).
+
+The RBF "median heuristic" — set σ from the median pairwise distance — has a
+kernel-agnostic core: every registered spec's entries are an elementwise
+function of ONE pairwise statistic (``sqdist`` / ``dot`` / ``l1dist``), so a
+quantile of that statistic fixes the spec's scale parameter such that typical
+entries land in the kernel's responsive range.  PR 4 left ``calibrate_sigma``
+RBF-only and dense; here it generalizes to every spec and streams:
+
+1. the statistic is exposed as an operator (``PairwiseKernel.stat_operator``:
+   the spec's stat with an identity entry function), so
+2. an n × m panel of statistic values against ``m`` uniform anchor points is
+   ONE ``columns`` gather — exactly n·m statistic evaluations (a direct
+   block for pairwise kernels; generic operators stream it through the
+   panel engine's selected-column gather), and
+3. a registered per-spec *calibration rule* maps the quantile of those values
+   to the spec's parameters (σ for rbf, γ for laplacian/polynomial, ℓ for
+   matern32; linear has none).
+
+Custom kernels register a rule next to their spec::
+
+    from repro.kernels.pairwise import calibrate, specs
+
+    @calibrate.register_calibration("cauchy")
+    def _cal_cauchy(stat_q, base_spec):
+        return specs.get_spec("cauchy", gamma=1.0 / max(stat_q, 1e-12))
+
+    spec = calibrate.calibrate_sigma(X, spec="cauchy")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise import specs as _specs
+from repro.kernels.pairwise.specs import KernelSpec
+
+_EPS = 1e-12
+
+
+def anchor_indices(key: jax.Array, n: int, anchors: int) -> jnp.ndarray:
+    """Uniform without-replacement anchor columns for the statistic panel."""
+    return jax.random.choice(key, n, shape=(min(anchors, n),), replace=False)
+
+
+def stat_quantile(stat_op, q: float = 0.5, anchors: int = 128,
+                  key: Optional[jax.Array] = None,
+                  anchor_idx: Optional[jnp.ndarray] = None,
+                  transform: Optional[Callable] = None) -> jnp.ndarray:
+    """q-quantile of a statistic operator's entries against anchor columns.
+
+    ``stat_op`` is any ``SPSDOperator`` whose entries are the raw pairwise
+    statistic (``PairwiseKernel.stat_operator()``); the n × m anchor panel is
+    ONE ``columns`` gather — exactly n·m statistic evaluations, the same
+    budget class as the C panel, budget-asserted by the calibration tests.
+    (``PairwiseKernel`` answers it as a direct block from the data; generic
+    operators stream it through the panel engine's selected-column gather —
+    never a full-operator sweep, which would evaluate all n² entries.)  The
+    quantile is exact over those n·m pairs; ``transform`` (e.g. ``jnp.abs``
+    for the signed dot statistic) is applied first.  Pass ``anchor_idx`` to
+    pin the anchor set (parity tests); otherwise it is drawn from ``key``.
+    """
+    if anchor_idx is None:
+        key = jax.random.PRNGKey(0) if key is None else key
+        anchor_idx = anchor_indices(key, stat_op.n, anchors)
+    S = stat_op.columns(jnp.asarray(anchor_idx))
+    if transform is not None:
+        S = transform(S)
+    return jnp.quantile(S.astype(jnp.float32), q)
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationRule:
+    """How a spec family turns a statistic quantile into parameters.
+
+    ``needs_stat=False`` marks parameterless families (linear): the
+    statistic sweep is skipped entirely and ``apply`` receives 0.0.
+    """
+
+    apply: Callable[[float, KernelSpec], KernelSpec]
+    transform: Optional[Callable] = None     # pre-quantile (e.g. abs for dot)
+    needs_stat: bool = True
+
+
+_RULES: Dict[str, CalibrationRule] = {}
+
+
+def register_calibration(name: str, transform: Optional[Callable] = None,
+                         needs_stat: bool = True):
+    """Decorator: register ``fn(stat_q, base_spec) -> KernelSpec`` for the
+    spec family ``name`` (``transform`` preprocesses statistic values before
+    the quantile — e.g. ``jnp.abs`` for signed dot products; pass
+    ``needs_stat=False`` for parameterless families to skip the sweep)."""
+    def deco(fn: Callable[[float, KernelSpec], KernelSpec]):
+        _RULES[name] = CalibrationRule(apply=fn, transform=transform,
+                                       needs_stat=needs_stat)
+        return fn
+    return deco
+
+
+def registered_calibrations() -> Tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+def calibrate_sigma(X: jnp.ndarray, spec="rbf", *, q: float = 0.5,
+                    anchors: int = 128, key: Optional[jax.Array] = None,
+                    anchor_idx: Optional[jnp.ndarray] = None,
+                    use_pallas: bool = False, stat_op=None) -> KernelSpec:
+    """Calibrated ``KernelSpec`` for ``spec`` from one streaming gather pass.
+
+    ``spec`` is a registered name or a ``KernelSpec`` (whose non-scale
+    parameters — e.g. polynomial degree/coef0 — are preserved).  The spec's
+    pairwise statistic is quantiled against ``anchors`` uniform anchor points
+    in ONE n×m gather (see ``stat_quantile`` — n·m statistic evaluations,
+    never a full sweep) and mapped to parameters by the family's registered
+    calibration rule.  ``stat_op`` overrides the statistic operator
+    (instrumented wrappers in tests).  Generalizes the RBF-only dense
+    calibration of PR 4 to every registered spec.
+    """
+    base = _specs.get_spec(spec) if isinstance(spec, str) else spec
+    if base.name not in _RULES:
+        raise ValueError(
+            f"no calibration rule for kernel {base.name!r} (registered: "
+            f"{registered_calibrations()}); add one with "
+            f"@register_calibration({base.name!r})")
+    rule = _RULES[base.name]
+    if not rule.needs_stat:            # parameterless family: no sweep at all
+        return rule.apply(0.0, base)
+    if stat_op is None:
+        from repro.core.kernelop import PairwiseKernel
+        stat_op = PairwiseKernel(jnp.asarray(X), _specs.stat_only(base),
+                                 use_pallas)
+    qv = stat_quantile(stat_op, q=q, anchors=anchors, key=key,
+                       anchor_idx=anchor_idx, transform=rule.transform)
+    return rule.apply(float(qv), base)
+
+
+# ---------------------------------------------------------------------------
+# built-in rules: typical statistic -> O(1) argument of the entry function
+# ---------------------------------------------------------------------------
+
+@register_calibration("rbf")
+def _cal_rbf(stat_q: float, base: KernelSpec) -> KernelSpec:
+    """Median heuristic: σ² = q(‖x−y‖²)/2, so the typical entry is e^{-1}."""
+    return _specs.get_spec("rbf", sigma=(max(stat_q, _EPS) / 2.0) ** 0.5)
+
+
+@register_calibration("laplacian")
+def _cal_laplacian(stat_q: float, base: KernelSpec) -> KernelSpec:
+    """γ = 1/q(‖x−y‖₁): the typical L1 distance maps to entry e^{-1}."""
+    return _specs.get_spec("laplacian", gamma=1.0 / max(stat_q, _EPS))
+
+
+@register_calibration("matern32")
+def _cal_matern32(stat_q: float, base: KernelSpec) -> KernelSpec:
+    """ℓ = typical distance √q(‖x−y‖²): entry (1+√3)e^{-√3} at that range."""
+    return _specs.get_spec("matern32",
+                           length_scale=max(stat_q, _EPS) ** 0.5)
+
+
+@register_calibration("polynomial", transform=jnp.abs)
+def _cal_polynomial(stat_q: float, base: KernelSpec) -> KernelSpec:
+    """γ = 1/q(|xᵀy|) keeps γ·xᵀy O(1), so (γ xᵀy + c)ᵖ neither explodes nor
+    collapses to cᵖ; degree and coef0 carry over from the base spec."""
+    return _specs.get_spec("polynomial", degree=base.param("degree"),
+                           gamma=1.0 / max(stat_q, _EPS),
+                           coef0=base.param("coef0"))
+
+
+@register_calibration("linear", needs_stat=False)
+def _cal_linear(stat_q: float, base: KernelSpec) -> KernelSpec:
+    """K = X Xᵀ has no scale parameter — calibration is the identity (and
+    the statistic sweep is skipped: 0 passes)."""
+    return base

@@ -151,6 +151,24 @@ def diag(spec: KernelSpec, X: jnp.ndarray) -> jnp.ndarray:
     return spec.entry_fn(t)
 
 
+@functools.lru_cache(maxsize=None)
+def _stat_only(stat: str) -> KernelSpec:
+    return KernelSpec(f"stat[{stat}]", stat, lambda t: t)
+
+
+def stat_only(spec) -> KernelSpec:
+    """Identity-entry spec over ``spec``'s pairwise statistic.
+
+    The resulting kernel's entries ARE the raw statistic (‖x−y‖², xᵀy, or
+    ‖x−y‖₁), so the whole operator/sweep machinery — including the fused
+    Pallas template — can stream statistic panels; per-spec bandwidth
+    calibration (``repro.kernels.pairwise.calibrate``) quantiles them in one
+    sweep.  ``spec`` may be a ``KernelSpec`` or a bare stat name.  Cached, so
+    each statistic costs one jit entry.
+    """
+    return _stat_only(spec if isinstance(spec, str) else spec.stat)
+
+
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------

@@ -1,0 +1,190 @@
+"""Operator conformance harness: ONE parameterized contract run over every
+(operator construction × registered KernelSpec) pair.
+
+For each registered kernel the harness builds the operator three ways —
+``PairwiseKernel`` (jnp panel route), ``PairwiseKernel(use_pallas=True)``
+(fused template, interpret mode on CPU), and ``DenseSPSD`` over the
+independent ``pairwise/ref.py`` oracle — plus the factored ``LinearKernel``
+for the linear spec, and asserts the full ``SPSDOperator`` protocol against
+the oracle to ≤ 1e-5 (scale-normalized): matmat / columns / block / diag /
+frobenius / multi-plan sweep parity, recorded sweep routes, and pytree
+round-trips.  Hypothesis drives extra shape coverage; the forced-8-device CI
+job re-runs the file so the sharded sweep cases execute too.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import sweep as sw
+from repro.core.instrument import CountingOperator
+from repro.core.kernelop import (DenseSPSD, LinearKernel, PairwiseKernel,
+                                 SPSDOperator)
+from repro.kernels.pairwise import ref as pw_ref
+from repro.kernels.pairwise import specs as pw_specs
+
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+N, D = 131, 6
+
+
+def _data(seed=0, n=N, d=D):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+def _parity(got, ref, tol=1e-5):
+    """max|got − ref| ≤ tol · max(1, max|ref|) — tol-level parity relative to
+    the result scale (f32 contractions reassociate across routes)."""
+    got, ref = np.asarray(got), np.asarray(ref)
+    assert got.shape == ref.shape, (got.shape, ref.shape)
+    scale = max(1.0, float(np.max(np.abs(ref))))
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol * scale)
+
+
+def _build(op_kind: str, X, spec) -> SPSDOperator:
+    if op_kind == "pairwise":
+        return PairwiseKernel(X, spec, use_pallas=False)
+    if op_kind == "pairwise_pallas":
+        return PairwiseKernel(X, spec, use_pallas=True)
+    if op_kind == "dense":
+        return DenseSPSD(jnp.asarray(pw_ref.kernel_block(spec, X, X)))
+    if op_kind == "linear_factored":
+        return LinearKernel(X)
+    raise ValueError(op_kind)
+
+
+OP_KINDS = ("pairwise", "pairwise_pallas", "dense")
+CASES = [(name, kind) for name in pw_specs.registered_kernels()
+         for kind in OP_KINDS] + [("linear", "linear_factored")]
+
+
+@pytest.mark.parametrize("name,op_kind", CASES,
+                         ids=[f"{n}-{k}" for n, k in CASES])
+def test_operator_protocol_conformance(name, op_kind):
+    """The whole pointwise + streaming protocol against the ref.py oracle."""
+    X = _data(0)
+    spec = pw_specs.suggested_spec(name, D)
+    op = _build(op_kind, X, spec)
+    Kd = np.asarray(pw_ref.kernel_block(spec, X, X), np.float64)
+    n = op.n
+    assert n == N
+
+    rng = np.random.default_rng(1)
+    V = jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)
+
+    # matmat / frobenius (streaming protocol)
+    _parity(op.matmat(V), Kd @ np.asarray(V, np.float64))
+    got_fro = float(op.frobenius_norm_sq(block_size=48))
+    assert got_fro == pytest.approx(float((Kd ** 2).sum()), rel=1e-4)
+
+    # pointwise access: columns / block / diag
+    cidx = jnp.asarray([0, 7, n // 2, n - 1])
+    _parity(op.columns(cidx), Kd[:, np.asarray(cidx)])
+    ridx = jnp.asarray([3, 50, n - 1])
+    bidx = jnp.asarray([1, 4, n // 3])
+    _parity(op.block(ridx, bidx), Kd[np.asarray(ridx)][:, np.asarray(bidx)])
+    _parity(op.diag(), np.diagonal(Kd))
+
+    # multi-plan sweep from one pass: matmul-shaped bundle + recorded route
+    got_mat, got_gat = op.sweep([sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx)],
+                                block_size=48)
+    _parity(got_mat, Kd @ np.asarray(V, np.float64))
+    _parity(got_gat, Kd[:, np.asarray(cidx)])
+    expected_route = ("pallas_fused" if op.supports_fused_matmat()
+                      else "panel")
+    assert op._last_sweep_route == expected_route
+
+    # a non-matmul plan forces (and records) the panel route for everyone
+    got_fro2, = op.sweep([sw.FrobeniusPlan()], block_size=48)
+    assert op._last_sweep_route == "panel"
+    assert float(got_fro2) == pytest.approx(float((Kd ** 2).sum()), rel=1e-4)
+
+
+@pytest.mark.parametrize("name,op_kind", CASES,
+                         ids=[f"{n}-{k}" for n, k in CASES])
+def test_operator_pytree_round_trip(name, op_kind):
+    """flatten→unflatten preserves class, metadata, and operator behavior."""
+    X = _data(2)
+    spec = pw_specs.suggested_spec(name, D)
+    op = _build(op_kind, X, spec)
+    leaves, treedef = jax.tree_util.tree_flatten(op)
+    op2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(op2) is type(op)
+    assert op2.n == op.n
+    if isinstance(op, PairwiseKernel):
+        assert op2.spec is op.spec          # registry-cached spec identity
+        assert op2.use_pallas == op.use_pallas
+    V = jnp.asarray(np.random.default_rng(3).normal(size=(op.n, 3)),
+                    jnp.float32)
+    np.testing.assert_array_equal(np.asarray(op.matmat(V)),
+                                  np.asarray(op2.matmat(V)))
+
+
+@pytest.mark.parametrize("name", pw_specs.registered_kernels())
+def test_counting_operator_transparency(name):
+    """CountingOperator must not perturb results and must record the route
+    the inner operator took, for every spec."""
+    X = _data(4)
+    spec = pw_specs.suggested_spec(name, D)
+    inner = PairwiseKernel(X, spec, use_pallas=True)
+    Kc = CountingOperator(inner)
+    V = jnp.asarray(np.random.default_rng(5).normal(size=(N, 4)), jnp.float32)
+    got = Kc.matmat(V)
+    ref = PairwiseKernel(X, spec, use_pallas=True).matmat(V)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    assert Kc.last_route == "pallas_fused"
+    assert Kc.counts["sweeps"] == 1 and Kc.counts["fused_sweeps"] == 1
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.integers(65, 180), d=st.integers(2, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_conformance_shapes_hypothesis(n, d, seed):
+    """Random (n, d): matmat + columns parity for a seed-chosen spec on both
+    the jnp and dense constructions (tile-alignment must never matter)."""
+    names = pw_specs.registered_kernels()
+    spec = pw_specs.suggested_spec(names[seed % len(names)], d)
+    X = _data(seed, n=n, d=d)
+    Kd = np.asarray(pw_ref.kernel_block(spec, X, X), np.float64)
+    V = jnp.asarray(np.random.default_rng(seed + 1).normal(size=(n, 3)),
+                    jnp.float32)
+    cidx = jnp.asarray([0, n // 2, n - 1])
+    for op in (PairwiseKernel(X, spec), DenseSPSD(jnp.asarray(Kd, jnp.float32))):
+        _parity(op.matmat(V, block_size=37), Kd @ np.asarray(V, np.float64))
+        _parity(op.columns(cidx), Kd[:, np.asarray(cidx)])
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device path (the CI multidevice job re-runs this file)
+# ---------------------------------------------------------------------------
+
+def _mesh():
+    return Mesh(np.asarray(jax.devices()), ("data",))
+
+
+@multidevice
+@pytest.mark.parametrize("name", pw_specs.registered_kernels())
+@pytest.mark.parametrize("use_pallas", [True, False],
+                         ids=["pallas", "jnp"])
+def test_conformance_sharded_sweep(name, use_pallas):
+    """Sharded sweeps for every spec: parity vs the oracle AND the recorded
+    route ('pallas_fused_sharded' for fused-capable, 'panel' otherwise)."""
+    n = 259
+    X = _data(6, n=n)
+    spec = pw_specs.suggested_spec(name, D)
+    Kc = CountingOperator(PairwiseKernel(X, spec, use_pallas=use_pallas))
+    Kd = np.asarray(pw_ref.kernel_block(spec, X, X), np.float64)
+    V = jnp.asarray(np.random.default_rng(7).normal(size=(n, 4)), jnp.float32)
+    cidx = jnp.asarray([2, n // 2, n - 1])
+    got = Kc.sweep([sw.MatmulPlan(V), sw.ColumnGatherPlan(cidx)],
+                   mesh=_mesh())
+    assert Kc.last_route == ("pallas_fused_sharded" if use_pallas
+                             else "panel")
+    _parity(got[0], Kd @ np.asarray(V, np.float64))
+    _parity(got[1], Kd[:, np.asarray(cidx)])

@@ -1,0 +1,330 @@
+"""Selection-policy subsystem: registry behavior, masked (ragged) selection,
+per-spec streaming calibration parity, ragged auto-bucketing, and the
+streaming fast_cur selection acceptance case (n=3k, memory-guarded)."""
+import unittest.mock as mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cur, selection, spsd
+from repro.core.instrument import CountingOperator
+from repro.core.kernelop import PairwiseKernel, RBFKernel
+from repro.core.leverage import row_leverage_scores
+from repro.kernels.pairwise import calibrate as pw_cal
+from repro.kernels.pairwise import specs as pw_specs
+
+
+def _clustered(seed, n=400, d=8, k=8):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 2.5
+    labels = rng.integers(0, k, size=n)
+    X = centers[labels] + rng.normal(size=(n, d)) * 0.4
+    return jnp.asarray(X, jnp.float32)
+
+
+def _rbf(seed, n=400, sigma=2.0, **kw):
+    return RBFKernel(_clustered(seed, n=n), sigma=sigma, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_policies():
+    names = selection.registered_policies()
+    for required in ("uniform", "leverage", "uniform_adaptive2"):
+        assert required in names
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        selection.get_policy("nope")
+
+
+def test_policy_instance_passes_through():
+    pol = selection.LeveragePolicy(pilot=40)
+    assert selection.get_policy(pol) is pol
+
+
+def test_register_custom_policy_end_to_end():
+    class FirstK(selection.SelectionPolicy):
+        name, rounds, sweeps_per_round, gathers = "first_k", 1, 0, 0
+
+        def select(self, K, key, c, **kw):
+            return jnp.arange(c)
+
+    selection.register_policy("first_k")(FirstK)
+    try:
+        Kop = _rbf(0, n=200)
+        ap = spsd.fast_model(Kop, jax.random.PRNGKey(0), c=10, s=40,
+                             s_sketch="gaussian", selection="first_k")
+        np.testing.assert_array_equal(np.asarray(ap.P_indices),
+                                      np.arange(10))
+        assert np.isfinite(float(spsd.relative_error(Kop, ap,
+                                                     method="dense")))
+    finally:
+        selection._POLICIES.pop("first_k", None)
+
+
+def test_leverage_policy_tracks_dense_svd_scores():
+    """The blocked-Gram pilot leverage must match the dense SVD leverage of
+    the same pilot panel — identical probabilities, same selections."""
+    Kop = _rbf(1, n=300)
+    pol = selection.LeveragePolicy()
+    kp, ks = jax.random.split(jax.random.PRNGKey(7))
+    pilot_idx = selection._uniform_indices(kp, Kop.n, 24, None)
+    Cp = Kop.columns(pilot_idx)
+    lev_dense = row_leverage_scores(Cp)
+    idx_pol = np.asarray(pol.select(Kop, jax.random.PRNGKey(7), 12,
+                                    block_size=64))
+    idx_ref = np.asarray(selection._weighted_indices_without_replacement(
+        ks, lev_dense, 12, jnp.ones((Kop.n,), jnp.float32)))
+    np.testing.assert_array_equal(idx_pol, idx_ref)
+
+
+# ---------------------------------------------------------------------------
+# masked (ragged) selection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["uniform", "leverage", "uniform_adaptive2"])
+def test_policies_respect_mask(name):
+    """Padded operators: every policy must select from valid rows only, even
+    with poisoned padding entries dominating the kernel."""
+    n, nv = 200, 150
+    X = np.array(_clustered(2, n=n))
+    X[nv:] = 99.0                                 # poison the padding rows
+    Kop = RBFKernel(jnp.asarray(X, jnp.float32), sigma=2.0)
+    mask = (jnp.arange(n) < nv).astype(jnp.float32)
+    pol = selection.get_policy(name)
+    idx = np.asarray(pol.select(Kop, jax.random.PRNGKey(0), 12, mask=mask))
+    assert idx.max() < nv, (name, idx)
+    assert len(set(idx.tolist())) == 12
+
+
+def test_leverage_pilot_clamps_to_valid_rows():
+    """Regression: a pilot wider than the valid-row count must clamp instead
+    of silently pulling zero-probability padding columns into the panel
+    (n_valid < max(2c, c+8) — the overflow class PR 3 hardened
+    uniform_column_sketch against)."""
+    n, nv, c = 64, 20, 16                 # default pilot 2c = 32 > nv = 20
+    X = np.array(_clustered(7, n=n))
+    X[nv:] = np.nan                       # poisoned padding: NaN kernel rows
+    Kop = RBFKernel(jnp.asarray(X, jnp.float32), sigma=2.0)
+    mask = (jnp.arange(n) < nv).astype(jnp.float32)
+    idx = np.asarray(selection.LeveragePolicy().select(
+        Kop, jax.random.PRNGKey(0), c, mask=mask))
+    assert idx.max() < nv and len(set(idx.tolist())) == c
+
+
+def test_leverage_traced_mask_overflow_remaps_onto_valid_rows():
+    """Under vmap the mask is traced (no clamp possible): overflow picks must
+    be remapped onto valid columns, never onto padding."""
+    n, c = 64, 16
+    n_valid = np.array([20, 64])          # item 0 overflows the 2c=32 pilot
+    Xb = np.stack([np.array(_clustered(8, n=n)) for _ in range(2)])
+    Xb[0, 20:] = 99.0
+    Xb = jnp.asarray(Xb, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(1), 2)
+
+    def one(Xi, key, nvi):
+        mask = (jnp.arange(n) < nvi).astype(jnp.float32)
+        return selection.LeveragePolicy().select(
+            RBFKernel(Xi, sigma=2.0), key, c, mask=mask)
+
+    idx = np.asarray(jax.vmap(one)(Xb, keys, jnp.asarray(n_valid)))
+    for b, nvi in enumerate(n_valid):
+        assert idx[b].max() < nvi, (b, idx[b])
+        assert len(set(idx[b].tolist())) == c
+
+
+def test_fast_model_batched_selection_policies_vmap():
+    """Non-uniform policies must trace under the batched vmap (pilot gathers,
+    residual sweeps and all) and keep padding out of the model."""
+    rng = np.random.default_rng(3)
+    n_valid = np.array([150, 200])
+    npad = 200
+    Xb = rng.normal(size=(2, npad, 6))
+    for b, nv in enumerate(n_valid):
+        Xb[b, nv:] = 99.0
+    Xb = jnp.asarray(Xb, jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(4), 2)
+    for name in ("leverage", "uniform_adaptive2"):
+        bat = spsd.fast_model_batched(RBFKernel(Xb, sigma=1.5), keys, c=12,
+                                      s=48, s_sketch="gaussian",
+                                      n_valid=jnp.asarray(n_valid),
+                                      selection=name)
+        assert np.all(np.isfinite(np.asarray(bat.U))), name
+        for b, nv in enumerate(n_valid):
+            assert int(jnp.max(bat.P_indices[b])) < nv, name
+            Ktrue = RBFKernel(Xb[b, :nv], sigma=1.5)
+            ap = spsd.SPSDApprox(C=bat.C[b][:nv], U=bat.U[b])
+            err = float(spsd.relative_error(Ktrue, ap, method="dense"))
+            assert np.isfinite(err) and err < 0.5, (name, b, err)
+
+
+# ---------------------------------------------------------------------------
+# ragged auto-bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_by_size_bounds_padding_waste():
+    sizes = [3000, 2900, 1000, 950, 120, 110, 100]
+    buckets = spsd.bucket_by_size(sizes, waste=0.25)
+    seen = sorted(i for b in buckets for i in b)
+    assert seen == list(range(len(sizes)))        # a partition
+    for b in buckets:
+        cap = max(sizes[i] for i in b)
+        for i in b:
+            assert cap <= sizes[i] * 1.25 + 1e-9  # ≤ 25% padding each
+    # wildly different sizes must NOT share a bucket
+    by_item = {i: tuple(b) for b in buckets for i in b}
+    assert by_item[0] != by_item[4]
+
+
+def test_fast_model_ragged_matches_per_item():
+    rng = np.random.default_rng(5)
+    sizes = [150, 160, 90, 300]
+    Xs = [jnp.asarray(rng.normal(size=(n, 6)), jnp.float32) for n in sizes]
+    keys = jax.random.split(jax.random.PRNGKey(6), len(sizes))
+    outs = spsd.fast_model_ragged(Xs, lambda Xb: RBFKernel(Xb, sigma=1.5),
+                                  keys, c=12, s=48, s_sketch="gaussian",
+                                  waste=0.25)
+    assert [o.C.shape for o in outs] == [(n, 12) for n in sizes]
+    for o, X, n in zip(outs, Xs, sizes):
+        err = float(spsd.relative_error(RBFKernel(X, sigma=1.5), o,
+                                        method="dense"))
+        assert np.isfinite(err) and err < 0.5, (n, err)
+
+
+# ---------------------------------------------------------------------------
+# per-spec streaming calibration: parity vs a dense quantile oracle + budget
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", pw_specs.registered_kernels())
+def test_calibrate_sigma_parity_and_single_sweep(name):
+    """calibrate_sigma(spec=...) for EVERY registered spec: parameters match
+    the dense-quantile oracle over the same anchor pairs to ≤ 1e-5, at a
+    metered budget of ONE n×m statistic gather — exactly n·m evaluated
+    entries, zero full-operator sweeps (stricter than the 1-sweep bound)."""
+    n, d = 257, 8
+    X = _clustered(10, n=n, d=d)
+    spec = pw_specs.suggested_spec(name, d)
+    anchor_idx = jnp.arange(3, n, 11)
+
+    stat_op = CountingOperator(PairwiseKernel(X, pw_specs.stat_only(spec)))
+    cal = pw_cal.calibrate_sigma(X, spec=spec, anchor_idx=anchor_idx,
+                                 stat_op=stat_op)
+    rule = pw_cal._RULES[spec.name]
+    # budget: one n×m gather (parameterless families skip even that)
+    assert stat_op.counts["sweeps"] == 0
+    if rule.needs_stat:
+        assert stat_op.counts["columns"] == 1
+        assert stat_op.counts["entries"] == n * int(anchor_idx.shape[0])
+    else:
+        assert stat_op.counts["columns"] == 0 and stat_op.counts["entries"] == 0
+    assert stat_op.counts["fulls"] == 0
+
+    # dense oracle: the raw statistic over the SAME pairs, full quantile
+    S = pw_specs.stat_block(spec.stat, X, jnp.take(X, anchor_idx, axis=0))
+    if rule.transform is not None:
+        S = rule.transform(S)
+    expected = rule.apply(float(jnp.quantile(S.astype(jnp.float32), 0.5)),
+                          spec)
+    assert cal.name == expected.name
+    for (k1, v1), (k2, v2) in zip(cal.params, expected.params):
+        assert k1 == k2
+        if v1 is None or v2 is None:
+            assert v1 == v2
+        else:
+            assert float(v1) == pytest.approx(float(v2), rel=1e-5), (name, k1)
+
+
+def test_calibrated_specs_are_usable_end_to_end():
+    """A calibrated spec must drop straight into fast_model for every
+    registered family (principled bandwidths, not just plumbing)."""
+    X = _clustered(11, n=300, d=6)
+    for name in pw_specs.registered_kernels():
+        cal = pw_cal.calibrate_sigma(X, spec=pw_specs.suggested_spec(name, 6),
+                                     key=jax.random.PRNGKey(0))
+        Kop = PairwiseKernel(X, cal)
+        ap = spsd.fast_model(Kop, jax.random.PRNGKey(1), c=24, s=96,
+                             s_sketch="gaussian")
+        err = float(spsd.relative_error(Kop, ap, method="dense"))
+        assert np.isfinite(err) and err < 0.6, (name, err)
+
+
+def test_calibrate_unknown_kernel_raises():
+    @pw_specs.register_kernel("_test_cal_missing")
+    def _missing(gamma: float = 1.0):
+        return pw_specs.KernelSpec("_test_cal_missing", "sqdist",
+                                   lambda sq: jnp.exp(-gamma * sq),
+                                   params=(("gamma", gamma),))
+    try:
+        with pytest.raises(ValueError, match="no calibration rule"):
+            pw_cal.calibrate_sigma(_clustered(12, n=64),
+                                   spec="_test_cal_missing")
+    finally:
+        pw_specs._REGISTRY.pop("_test_cal_missing", None)
+
+
+def test_register_custom_calibration_rule():
+    @pw_specs.register_kernel("_test_cauchy")
+    def _cauchy(gamma: float = 1.0):
+        return pw_specs.KernelSpec("_test_cauchy", "sqdist",
+                                   lambda sq: 1.0 / (1.0 + gamma * sq),
+                                   params=(("gamma", gamma),))
+
+    @pw_cal.register_calibration("_test_cauchy")
+    def _cal(stat_q, base):
+        return pw_specs.get_spec("_test_cauchy", gamma=1.0 / max(stat_q,
+                                                                 1e-12))
+    try:
+        X = _clustered(13, n=128, d=5)
+        cal = pw_cal.calibrate_sigma(X, spec="_test_cauchy",
+                                     key=jax.random.PRNGKey(0))
+        assert cal.param("gamma") > 0.0
+    finally:
+        pw_specs._REGISTRY.pop("_test_cauchy", None)
+        pw_cal._RULES.pop("_test_cauchy", None)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: streaming fast_cur selection at n=3k, memory-guarded
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["leverage", "uniform_adaptive2"])
+def test_streaming_cur_selection_never_densifies_n3k(name):
+    """fast_cur(streaming) on an implicit PairwiseKernel at n=3000: C/R
+    selection streams (full() booby-trapped — the memory-guard pattern of
+    tests/test_streaming.py), direct kernel accesses stay O(n·(c+r+pilot))
+    (no O(n·r)-sized densify beyond the C/R panels), and the result matches
+    the dense-selection route's relative error within 10%."""
+    n, c, r, sc, sr = 3000, 48, 48, 96, 96
+    X = _clustered(20, n=n, d=8)
+    Kop = PairwiseKernel(X, pw_specs.rbf(2.0))
+    Kc = CountingOperator(Kop)
+    key = jax.random.PRNGKey(0)
+    pol = selection.get_policy(name)
+    with mock.patch.object(PairwiseKernel, "full",
+                           side_effect=AssertionError(
+                               "streaming CUR selection densified K")):
+        ap_s = cur.fast_cur(Kc, key, c=c, r=r, sc=sc, sr=sr,
+                            sketch_kind="gaussian", selection=name)
+    # sweep budget: 1 (A S_R) + 2 policy selections, nothing hidden
+    assert Kc.counts["sweeps"] == 1 + 2 * pol.sweep_budget()
+    # direct gathers: C + R panels + policy pilots/gathers only — every one
+    # an O(n · width) panel with widths summing to a few × (c + r), so no
+    # O(n·r)-sized selection intermediate can hide in the access pattern
+    direct = sum(Kc.counts[k] for k in ("columns", "blocks"))
+    assert direct <= 2 + 2 * pol.gathers
+    sweep_entries = Kc.counts["sweeps"] * int(1.02 * n * n)
+    assert Kc.counts["entries"] - sweep_entries <= 8 * n * (c + r)
+
+    # dense-selection reference: same keys, selection scored from the
+    # materialized matrix through DenseSPSD gathers
+    Kd = jnp.asarray(np.asarray(Kop.full(), np.float32))
+    ap_d = cur.fast_cur(Kd, key, c=c, r=r, sc=sc, sr=sr,
+                        sketch_kind="gaussian", streaming=False,
+                        selection=name)
+    e_s = float(cur.relative_error(Kd, ap_s))
+    e_d = float(cur.relative_error(Kd, ap_d))
+    assert np.isfinite(e_s) and np.isfinite(e_d)
+    assert abs(e_s - e_d) <= 0.10 * max(e_d, 1e-6), (name, e_s, e_d)

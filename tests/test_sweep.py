@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import cur, spsd
+from repro.core import cur, selection, spsd
 from repro.core import sketch as sk
 from repro.core import sweep as sw
 from repro.core.adaptive import _residual_column_norms, uniform_adaptive2_indices
@@ -148,6 +148,84 @@ def test_adaptive_single_sweep_per_round():
     assert idx.shape == (12,)
     assert Kc.counts["sweeps"] == 2          # one per adaptive round
     assert Kc.counts["columns"] == 2         # the n×(c/3) C gathers
+
+
+@pytest.mark.parametrize("name", selection.registered_policies())
+def test_selection_policy_meets_declared_budget(name):
+    """Every registered SelectionPolicy costs EXACTLY its declared kernel
+    sweeps and column gathers — metered, not trusted."""
+    pol = selection.get_policy(name)
+    Kc = CountingOperator(_rbf(40))
+    idx = np.asarray(pol.select(Kc, jax.random.PRNGKey(0), 12))
+    assert idx.shape == (12,)
+    assert len(set(idx.tolist())) == 12          # without replacement, always
+    assert Kc.counts["sweeps"] == pol.sweep_budget()
+    assert Kc.counts["columns"] == pol.gathers
+    assert Kc.counts["fulls"] == 0
+
+
+@pytest.mark.parametrize("name", selection.registered_policies())
+def test_fast_model_selection_budget_is_model_plus_policy(name):
+    """fast_model with any policy: 1 model sweep + exactly the policy's
+    declared selection sweeps — policies never leak extra passes."""
+    pol = selection.get_policy(name)
+    Kc = CountingOperator(_rbf(41))
+    ap = spsd.fast_model(Kc, jax.random.PRNGKey(0), c=18, s=72,
+                         s_sketch="gaussian", streaming=True, selection=name)
+    assert Kc.counts["sweeps"] == 1 + pol.sweep_budget()
+    assert Kc.counts["fulls"] == 0
+    e = float(spsd.relative_error(Kc, ap, method="dense"))
+    assert np.isfinite(e) and e < 0.5
+
+
+@pytest.mark.parametrize("name", selection.registered_policies())
+def test_streaming_fast_cur_selection_adds_zero_extra_sweeps(name):
+    """Streaming fast_cur on an implicit operator: the PR 2/3 budget was ONE
+    sweep (A S_R); policy selection for C and R adds exactly 2× the policy's
+    declared budget and nothing else."""
+    pol = selection.get_policy(name)
+    Kc = CountingOperator(_rbf(42, n=300))
+    ap = cur.fast_cur(Kc, jax.random.PRNGKey(3), c=12, r=12, sc=48, sr=48,
+                      sketch_kind="gaussian", selection=name)
+    assert Kc.counts["sweeps"] == 1 + 2 * pol.sweep_budget()
+    assert Kc.counts["fulls"] == 0
+    Kd = jnp.asarray(np.asarray(_rbf(42, n=300).full(), np.float32))
+    err = float(cur.relative_error(Kd, ap))
+    assert np.isfinite(err) and err < 1.0
+
+
+def test_adaptive_rounds_never_duplicate_columns():
+    """Regression (PR 5): the pre-fix adaptive draw used ``replace=True``
+    without zeroing selected indices, so a dominant residual column filled
+    EVERY slot of an adaptive round (duplicate columns in C, wasted budget).
+    K = identity with one huge diagonal entry reproduces it deterministically
+    for any key whose uniform round misses that entry."""
+    n = 40
+    K = DenseSPSD(jnp.diag(jnp.ones((n,)).at[n - 1].set(1e4)))
+    for seed in range(4):
+        idx = np.asarray(uniform_adaptive2_indices(K, jax.random.PRNGKey(seed),
+                                                   12))
+        assert len(set(idx.tolist())) == 12, idx
+
+
+def test_adaptive_rejects_c_below_round_count():
+    """c too small for one draw per adaptive round must raise, not silently
+    degrade to uniform while still declaring a 2-sweep budget."""
+    with pytest.raises(ValueError, match="uniform_adaptive2 needs c"):
+        uniform_adaptive2_indices(_rbf(43, n=60), jax.random.PRNGKey(0), 2)
+
+
+def test_adaptive_zeroes_selected_probabilities():
+    """Once a column is selected, later rounds may never re-draw it even when
+    every residual norm is numerically zero (rank-deficient K: the floor
+    falls back to uniform over the UNSELECTED set only)."""
+    n = 30
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(n, 1)), jnp.float32)
+    K = DenseSPSD(u @ u.T)                       # rank 1: residuals ~ 0
+    for seed in range(4):
+        idx = np.asarray(uniform_adaptive2_indices(K, jax.random.PRNGKey(seed),
+                                                   12))
+        assert len(set(idx.tolist())) == 12, idx
 
 
 def test_adaptive_norms_match_projection_formula():
