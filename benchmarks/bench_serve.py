@@ -1,0 +1,135 @@
+"""Serving latency/throughput bench: p50/p99 per-request latency and
+requests/s through ``KernelServer`` at several client-concurrency loads.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve
+    PYTHONPATH=src python -m benchmarks.bench_serve --loads 1 4 16
+
+Each load runs ``clients`` threads submitting mixed-size KRR/KPCA/feature
+queries back-to-back for a fixed request budget; the continuous-batching
+loop (``BatchPolicy``) coalesces them into bucketed fused launches.  Rows
+land in the smoke-bench payload (``BENCH_<tag>.json``, key ``"serve"``) so
+the serving-latency trajectory is tracked per PR alongside the sweep
+speedups.  Absolute ms at CI shapes are noise; the signal is p99/p50 shape
+(batching fairness) and requests/s trends.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import print_table
+from repro.core.instrument import CountingOperator
+from repro.kernels.pairwise import specs as pw_specs
+from repro.launch.serve_kernel import (
+    BatchPolicy,
+    KernelServer,
+    percentile_ms,
+    synth_problem,
+)
+from repro.serve import build_artifact
+
+QUERY_SIZES = (5, 17, 33, 64)
+TASKS_CYCLE = ("krr", "kpca", "features")
+
+
+def _client(server: KernelServer, queries: List, out_lat: List[float]):
+    for Xq, task in queries:
+        pending = server.submit(Xq, task)
+        pending.wait(timeout=60.0)
+        out_lat.append(pending.latency_s)
+
+
+def run(n: int = 240, d: int = 24, c: int = 48, s: int = 96,
+        loads=(1, 4, 16), requests_per_client: int = 8,
+        max_wait_ms: float = 2.0, seed: int = 0) -> List[dict]:
+    """One row per concurrency load:
+    {clients, requests, p50_ms, p99_ms, req_per_s, rows_per_s, buckets,
+    cross_sweeps, route}."""
+    X, y = synth_problem(n, d, seed)
+    spec = pw_specs.get_spec("rbf", sigma=1.0)
+    artifact = build_artifact(X, y, spec, c=c, s=s,
+                              key=jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed + 7)
+
+    def make_queries(count):
+        return [(rng.standard_normal(
+                     (int(rng.choice(QUERY_SIZES)), d)).astype(np.float32),
+                 TASKS_CYCLE[i % 3]) for i in range(count)]
+
+    rows = []
+    for clients in loads:
+        op = CountingOperator(artifact.landmark_operator())
+        server = KernelServer(
+            artifact, BatchPolicy(max_wait_s=max_wait_ms / 1e3), op=op)
+        try:
+            # warm the jit caches (all bucketed heights compile here)
+            for Xq, task in make_queries(6):
+                server.submit(Xq, task).wait(timeout=60.0)
+            op.reset()
+            server.latencies_s.clear()
+            buckets0 = server.buckets_served
+
+            per_client = [make_queries(requests_per_client)
+                          for _ in range(clients)]
+            lats: List[List[float]] = [[] for _ in range(clients)]
+            threads = [threading.Thread(target=_client,
+                                        args=(server, q, lat))
+                       for q, lat in zip(per_client, lats)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+        finally:
+            server.stop()
+
+        all_lats = [v for chunk in lats for v in chunk]
+        n_req = len(all_lats)
+        n_rows = sum(q[0].shape[0] for chunk in per_client for q in chunk)
+        rows.append({
+            "clients": clients,
+            "requests": n_req,
+            "p50_ms": round(percentile_ms(all_lats, 50), 3),
+            "p99_ms": round(percentile_ms(all_lats, 99), 3),
+            "req_per_s": round(n_req / wall, 1),
+            "rows_per_s": round(n_rows / wall, 1),
+            "buckets": server.buckets_served - buckets0,
+            "cross_sweeps": op.counts["cross_sweeps"],
+            "route": op.last_route,
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--n", type=int, default=240)
+    p.add_argument("--d", type=int, default=24)
+    p.add_argument("--c", type=int, default=48)
+    p.add_argument("--s", type=int, default=96)
+    p.add_argument("--loads", type=int, nargs="+", default=[1, 4, 16])
+    p.add_argument("--requests-per-client", type=int, default=8)
+    p.add_argument("--max-wait-ms", type=float, default=2.0)
+    args = p.parse_args(argv)
+
+    rows = run(n=args.n, d=args.d, c=args.c, s=args.s,
+               loads=tuple(args.loads),
+               requests_per_client=args.requests_per_client,
+               max_wait_ms=args.max_wait_ms)
+    print_table(
+        "serving latency/throughput (KernelServer, continuous batching)",
+        ["clients", "requests", "p50_ms", "p99_ms", "req/s", "rows/s",
+         "buckets", "route"],
+        [[r["clients"], r["requests"], r["p50_ms"], r["p99_ms"],
+          r["req_per_s"], r["rows_per_s"], r["buckets"], r["route"]]
+         for r in rows])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,153 @@
+"""Bench-trajectory regression gate: diff a fresh smoke BENCH payload
+against the latest committed ``BENCH_pr*.json`` baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare_bench \
+        --fresh results/BENCH_smoke.json            # baseline auto-located
+
+Hard gates (exit 1) — the two numbers the paper's efficiency story rests
+on, with generous tolerances because CI runners are noisy:
+
+- scaling rows (matched by ``n``): the fused-sweep ``speedup`` may not drop
+  below ``baseline × (1 − tol_speedup)``, and ``rel_err_fused`` may not
+  exceed ``baseline × (1 + tol_err) + 1e-6``.
+- kernels rows (matched by kernel name): ``rel_err`` under the same bound.
+
+Everything else — wall seconds, routes, serve latency, new/removed rows —
+is printed as ADVISORY only: absolute timings at smoke shapes measure the
+runner, not the code.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def find_baseline(root: str = REPO_ROOT) -> Optional[str]:
+    """Latest committed ``BENCH_pr<N>.json`` (highest N), or None."""
+    best: Tuple[int, Optional[str]] = (-1, None)
+    for path in glob.glob(os.path.join(root, "BENCH_pr*.json")):
+        m = re.fullmatch(r"BENCH_pr(\d+)\.json", os.path.basename(path))
+        if m and int(m.group(1)) > best[0]:
+            best = (int(m.group(1)), path)
+    return best[1]
+
+
+def _index(rows, key) -> dict:
+    return {r[key]: r for r in rows if key in r}
+
+
+def compare(fresh: dict, base: dict, tol_speedup: float = 0.5,
+            tol_err: float = 0.5) -> Tuple[List[str], List[str]]:
+    """Returns (failures, advisories) as printable strings."""
+    failures: List[str] = []
+    advisories: List[str] = []
+
+    def err_bound(b: float) -> float:
+        return b * (1.0 + tol_err) + 1e-6
+
+    # -- scaling: fused speedup + fused rel-err are the tentpole metrics ----
+    f_scale = _index(fresh.get("scaling", []), "n")
+    b_scale = _index(base.get("scaling", []), "n")
+    for n in sorted(set(f_scale) & set(b_scale)):
+        f, b = f_scale[n], b_scale[n]
+        floor = b["speedup"] * (1.0 - tol_speedup)
+        if f["speedup"] < floor:
+            failures.append(
+                f"scaling n={n}: fused speedup {f['speedup']:.2f}x < "
+                f"{floor:.2f}x floor (baseline {b['speedup']:.2f}x "
+                f"- {tol_speedup:.0%})")
+        else:
+            advisories.append(
+                f"scaling n={n}: speedup {b['speedup']:.2f}x -> "
+                f"{f['speedup']:.2f}x")
+        if f["rel_err_fused"] > err_bound(b["rel_err_fused"]):
+            failures.append(
+                f"scaling n={n}: rel_err_fused {f['rel_err_fused']:.4g} > "
+                f"{err_bound(b['rel_err_fused']):.4g} bound "
+                f"(baseline {b['rel_err_fused']:.4g})")
+    for n in sorted(set(b_scale) - set(f_scale)):
+        advisories.append(f"scaling n={n}: row dropped from fresh payload")
+
+    # -- kernels: per-registry-kernel approximation quality -----------------
+    f_k = _index(fresh.get("kernels", []), "kernel")
+    b_k = _index(base.get("kernels", []), "kernel")
+    for name in sorted(set(f_k) & set(b_k)):
+        f, b = f_k[name], b_k[name]
+        if f["rel_err"] > err_bound(b["rel_err"]):
+            failures.append(
+                f"kernels {name}: rel_err {f['rel_err']:.4g} > "
+                f"{err_bound(b['rel_err']):.4g} bound "
+                f"(baseline {b['rel_err']:.4g})")
+        if f.get("route") != b.get("route"):
+            advisories.append(
+                f"kernels {name}: route {b.get('route')} -> "
+                f"{f.get('route')}")
+    for name in sorted(set(b_k) - set(f_k)):
+        advisories.append(f"kernels {name}: row dropped from fresh payload")
+
+    # -- advisory-only sections ---------------------------------------------
+    f_serve = _index(fresh.get("serve", []), "clients")
+    b_serve = _index(base.get("serve", []), "clients")
+    for cl in sorted(set(f_serve) & set(b_serve)):
+        advisories.append(
+            f"serve clients={cl}: p50 {b_serve[cl]['p50_ms']:.1f} -> "
+            f"{f_serve[cl]['p50_ms']:.1f} ms, req/s "
+            f"{b_serve[cl]['req_per_s']:.1f} -> "
+            f"{f_serve[cl]['req_per_s']:.1f}")
+    if fresh.get("total_seconds") and base.get("total_seconds"):
+        advisories.append(
+            f"smoke wall: {base['total_seconds']:.1f}s -> "
+            f"{fresh['total_seconds']:.1f}s")
+    return failures, advisories
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--fresh", default=os.path.join("results",
+                                                   "BENCH_smoke.json"))
+    p.add_argument("--baseline", default=None,
+                   help="explicit baseline path (default: latest "
+                        "BENCH_pr*.json at the repo root)")
+    p.add_argument("--tol-speedup", type=float, default=0.5,
+                   help="allowed fractional speedup drop (default 0.5)")
+    p.add_argument("--tol-err", type=float, default=0.5,
+                   help="allowed fractional rel-err growth (default 0.5)")
+    args = p.parse_args(argv)
+
+    baseline = args.baseline or find_baseline()
+    if baseline is None:
+        print("compare_bench: no BENCH_pr*.json baseline found — nothing "
+              "to gate (ok)")
+        return 0
+    if not os.path.exists(args.fresh):
+        print(f"compare_bench: fresh payload {args.fresh} missing")
+        return 1
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(baseline) as f:
+        base = json.load(f)
+
+    print(f"comparing {args.fresh} against {os.path.basename(baseline)}")
+    failures, advisories = compare(fresh, base, tol_speedup=args.tol_speedup,
+                                   tol_err=args.tol_err)
+    for line in advisories:
+        print(f"  ADVISORY {line}")
+    for line in failures:
+        print(f"  FAIL     {line}")
+    if failures:
+        print(f"compare_bench: {len(failures)} regression(s) beyond "
+              f"tolerance")
+        return 1
+    print("compare_bench: perf trajectory within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,7 +14,7 @@ import sys
 import time
 
 SUITES = ["spsd_error", "spsd_error_adaptive", "kpca", "spectral", "cur",
-          "time", "landmark", "ablations", "kernels"]
+          "time", "landmark", "ablations", "kernels", "serve"]
 
 SMOKE_JSON = os.path.join("results", "BENCH_smoke.json")
 
@@ -56,8 +56,8 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
     """
     import jax
     t0 = time.time()
-    from benchmarks import bench_cur, bench_kernels, bench_spsd_error, \
-        bench_time
+    from benchmarks import bench_cur, bench_kernels, bench_serve, \
+        bench_spsd_error, bench_time
     steps = {}
 
     def step(name, fn):
@@ -81,6 +81,8 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
         "cur_streaming_selection",
         lambda: bench_cur.run_streaming_selection(n=800, c=32, sc=64))
     kernels = step("kernels", lambda: bench_kernels.run())
+    serve = step("serve", lambda: bench_serve.run(loads=(1, 2, 8),
+                                                  requests_per_client=6))
 
     payload = {
         "total_seconds": round(time.time() - t0, 3),
@@ -91,6 +93,7 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
         "scaling": scaling,
         "kernels": kernels,
         "cur_streaming_selection": cur_selection,
+        "serve": serve,
     }
     out_dir = os.path.dirname(out)
     if out_dir:
@@ -152,6 +155,9 @@ def main(argv=None):
     if "kernels" in picked:
         from benchmarks import bench_kernels
         bench_kernels.main([])
+    if "serve" in picked:
+        from benchmarks import bench_serve
+        bench_serve.main([])
     print(f"\nbenchmarks completed in {time.time() - t0:.1f}s")
     return 0
 

@@ -1,6 +1,9 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
+    CheckpointCorruptionError,
     CheckpointManager,
+    gc_tmp,
     latest_step,
     restore,
+    restore_tree,
     save,
 )

@@ -36,6 +36,18 @@ import jax
 import numpy as np
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint directory exists but cannot be read back faithfully.
+
+    Raised for file-level damage — missing/truncated ``manifest.json``,
+    missing shard files, or an undecodable npz — as opposed to the
+    ``KeyError`` / ``ValueError`` a *healthy* checkpoint raises when it does
+    not match the requested ``like`` structure.  The serving path's
+    recompute-on-corruption hook (``runtime.fault_tolerance.ArtifactRecovery``)
+    catches exactly this type.
+    """
+
+
 def _flat_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
@@ -86,38 +98,77 @@ def save(directory: str, step: int, tree: Any,
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _committed_steps(directory: str):
+    """Step numbers whose directories are validly COMMITTED, sorted ascending.
+
+    Only entries that (a) parse as ``step_<int>``, (b) are not a ``.tmp``
+    write in flight (or a stale one a crash left behind), (c) are actual
+    directories, and (d) contain a ``manifest.json`` count.  (b)–(d) are the
+    regression surface: a leftover tmp dir, a stray file named like a step,
+    or a partially-deleted dir (a concurrent ``gc_tmp``/``_retain`` race)
+    must never be reported as the latest checkpoint and then fail to
+    restore.
+    """
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
-        if name.startswith("step_") and not name.endswith(".tmp"):
-            try:
-                steps.append(int(name.split("_")[1]))
-            except (IndexError, ValueError):
+        if not name.startswith("step_") or name.endswith(".tmp"):
+            continue
+        try:
+            step = int(name.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        path = os.path.join(directory, name)
+        if not os.path.isdir(path):
+            continue
+        if not os.path.isfile(os.path.join(path, "manifest.json")):
+            continue
+        steps.append(step)
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _committed_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _read_step_arrays(directory: str, step: int):
+    """{leaf path: array} for one committed step, with file-level damage
+    (missing dir/manifest/shards, truncated json/npz) classified as
+    ``CheckpointCorruptionError`` instead of leaking OSError/JSONDecodeError
+    into the serving boot path."""
+    path = _step_dir(directory, step)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_path = {}
+        for name in sorted(os.listdir(path)):
+            if not name.endswith(".npz"):
                 continue
-    return max(steps) if steps else None
+            with np.load(os.path.join(path, name)) as z:
+                for key in z.files:
+                    by_path[manifest[key]["path"]] = z[key]
+    except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint step {step} at {path} is unreadable "
+            f"({type(e).__name__}: {e})") from e
+    if not by_path:
+        raise CheckpointCorruptionError(
+            f"checkpoint step {step} at {path} has no shard files")
+    return by_path
 
 
 def restore(directory: str, step: int, like: Any) -> Any:
     """Load a checkpoint into the structure of ``like`` (shapes must match
     leaf-for-leaf; shardings are applied by the caller — elastic restore)."""
-    path = _step_dir(directory, step)
-    by_path = {}
-    for name in sorted(os.listdir(path)):
-        if not name.endswith(".npz"):
-            continue
-        with np.load(os.path.join(path, name)) as z:
-            with open(os.path.join(path, "manifest.json")) as f:
-                manifest = json.load(f)
-            for key in z.files:
-                by_path[manifest[key]["path"]] = z[key]
-
+    by_path = _read_step_arrays(directory, step)
     leaves, treedef = _flat_with_paths(like)
     out = []
     for pstr, leaf in leaves:
         if pstr not in by_path:
-            raise KeyError(f"checkpoint at {path} is missing leaf {pstr!r}")
+            raise KeyError(f"checkpoint step {step} at {directory} is "
+                           f"missing leaf {pstr!r}")
         arr = by_path[pstr]
         want = tuple(leaf.shape)
         if tuple(arr.shape) != want:
@@ -125,6 +176,27 @@ def restore(directory: str, step: int, like: Any) -> Any:
                 f"leaf {pstr!r}: checkpoint shape {arr.shape} != {want}")
         out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_tree(directory: str, step: int) -> dict:
+    """Load a checkpoint as a nested dict WITHOUT a ``like`` skeleton.
+
+    The manifest already records every leaf's path/shape/dtype, so a fresh
+    process that knows nothing about the stored shapes (a serving replica
+    warm-booting a ``KernelModelArtifact`` whose c/d/head sizes were chosen
+    at build time) can reconstruct the tree directly.  Leaf paths are split
+    on ``/`` into nested string-keyed dicts — i.e. the tree must have been a
+    JSON-style dict-of-dicts at save time (the artifact format is).
+    """
+    by_path = _read_step_arrays(directory, step)
+    out: dict = {}
+    for pstr, arr in by_path.items():
+        node = out
+        keys = pstr.split("/")
+        for k in keys[:-1]:
+            node = node.setdefault(k, {})
+        node[keys[-1]] = arr
+    return out
 
 
 def gc_tmp(directory: str) -> int:
@@ -195,9 +267,10 @@ class CheckpointManager:
     def _retain(self):
         if self.process_index != 0:
             return
-        steps = sorted(
-            int(n.split("_")[1]) for n in os.listdir(self.directory)
-            if n.startswith("step_") and not n.endswith(".tmp"))
+        # same validity filter as latest_step: junk entries (stray files,
+        # stale tmp dirs, mid-gc partial dirs) neither crash the retention
+        # thread on int() nor shift which real checkpoints are kept
+        steps = _committed_steps(self.directory)
         doomed = steps[:-self.keep] if self.keep > 0 else []
         for s in doomed:
             if self.keep_period and s % self.keep_period == 0:

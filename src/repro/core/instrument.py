@@ -43,7 +43,7 @@ class CountingOperator(SPSDOperator):
 
     def reset(self):
         self.counts = {"sweeps": 0, "panels": 0, "entries": 0,
-                       "fused_sweeps": 0,
+                       "fused_sweeps": 0, "cross_sweeps": 0,
                        "blocks": 0, "columns": 0, "diags": 0, "fulls": 0}
         self.last_route = None
         self._in_sweep = False
@@ -100,6 +100,19 @@ class CountingOperator(SPSDOperator):
         # attribute the route only on success, so a sweep that raised before
         # dispatching can never inherit the previous call's routing decision
         route = getattr(self.inner, "_last_sweep_route", "panel")
+        self.last_route = route
+        if route.startswith("pallas_fused"):
+            self.counts["fused_sweeps"] += 1
+        return out
+
+    def cross(self, Xq, Vs):
+        """Query-side rectangular launches (``repro.serve``): one
+        ``cross_sweeps`` tick and exactly n_q · n evaluated entries per call
+        — the serving acceptance tests assert one tick per query bucket."""
+        self.counts["cross_sweeps"] += 1
+        self.counts["entries"] += int(Xq.shape[0]) * self.n
+        out = self.inner.cross(Xq, Vs)
+        route = getattr(self.inner, "_last_sweep_route", "dense_rows")
         self.last_route = route
         if route.startswith("pallas_fused"):
             self.counts["fused_sweeps"] += 1

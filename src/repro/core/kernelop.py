@@ -95,6 +95,20 @@ class SPSDOperator:
         -> all rows).  Only called when ``supports_fused_matmat()``."""
         raise NotImplementedError
 
+    def cross(self, Xq: jnp.ndarray, Vs):
+        """[K(Xq, ·) @ V for V in Vs] for OUT-OF-SAMPLE query points Xq.
+
+        The query-time primitive of the serving path (``repro.serve``): one
+        rectangular launch between new points and this operator's data,
+        contracted against every right-hand side.  Only data-backed operators
+        (``PairwiseKernel``) can extend the kernel to unseen points; index-
+        backed operators (``DenseSPSD``) have no notion of a query point.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} is not data-backed; out-of-sample "
+            f"queries need a PairwiseKernel (or another operator that can "
+            f"evaluate K(x_query, x_data) from raw points)")
+
     # -- streaming protocol -------------------------------------------------
 
     def sweep(self, plans: Sequence, block_size: Optional[int] = None,
@@ -271,6 +285,25 @@ class PairwiseKernel(SPSDOperator):
         from repro.kernels.pairwise import ops as pw_ops
         Xr = self.X if row_idx is None else jnp.take(self.X, row_idx, axis=0)
         return pw_ops.kernel_matmat_multi_rows(self.spec, Xr, self.X, Vs)
+
+    def cross(self, Xq, Vs):
+        """[K(Xq, X) @ V for V in Vs] — the serving-path query launch.
+
+        Exactly the ``fused_rows`` row-slab template with the slab rows
+        replaced by the query points: the (n_q × n) rectangular kernel block
+        is computed tile-by-tile in VMEM (``use_pallas``) and contracted
+        against every head matrix in ONE launch, so a whole heterogeneous
+        query bucket (KRR predictions + KPCA projections + feature maps)
+        costs one evaluation of each cross-kernel entry.  The route is
+        recorded on ``_last_sweep_route`` like every sweep
+        (``pallas_fused_rows`` / ``dense_rows``).
+        """
+        from repro.kernels.pairwise import ops as pw_ops
+        self._last_sweep_route = ("pallas_fused_rows" if self.use_pallas
+                                  else "dense_rows")
+        return pw_ops.kernel_matmat_multi_rows(
+            self.spec, jnp.asarray(Xq), self.X, tuple(Vs),
+            use_pallas=self.use_pallas)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -1,7 +1,9 @@
 from repro.runtime.fault_tolerance import (  # noqa: F401
+    ArtifactRecovery,
     ElasticPlan,
     HeartbeatMonitor,
     PreemptionHandler,
+    RecoveryEvent,
     StragglerDetector,
     plan_elastic_remesh,
 )

@@ -24,6 +24,11 @@ dependence in the decision logic — callers inject timestamps):
                            shrink first — the model axis is fixed by the
                            checkpointed layout, which restores elastically
                            because checkpoints are resharding-on-read).
+- ``ArtifactRecovery``   : restore-or-recompute for serving replicas — a
+                           corrupt/missing precomputed artifact (factor
+                           store) is rebuilt from source instead of crashing
+                           the replica, with every decision recorded for the
+                           smoke tests to assert on.
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ import dataclasses
 import signal
 import threading
 from collections import deque
-from typing import Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +129,63 @@ class StragglerDetector:
                 action = "reseat" if ratio < 3.0 else "exclude"
                 out.append(StragglerReport(host=host, ratio=ratio,
                                            action=action))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# recompute-on-corruption (serving warm boot)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryEvent:
+    kind: str                        # 'restored' | 'missing' | 'corrupt' | 'rebuilt'
+    detail: str = ""
+
+
+class ArtifactRecovery:
+    """Restore-or-recompute policy for precomputed serving artifacts.
+
+    A replica booting from the factor store must never crash on a damaged
+    checkpoint — a truncated manifest or half-deleted step dir is an
+    *expected* failure mode (preemption mid-write, concurrent gc) whose
+    correct reaction is to recompute the artifact from source and persist a
+    fresh copy.  ``run`` encodes that policy; every decision lands in
+    ``events`` so tests (and the serve-smoke CI job) can assert whether a
+    boot was warm (``restored``) or cold (``missing``/``corrupt`` →
+    ``rebuilt``).  Like the rest of this module the logic is deterministic
+    and injectable: what counts as corruption is the ``corruption_types``
+    tuple (``checkpoint.CheckpointCorruptionError`` in production).
+    """
+
+    def __init__(self, corruption_types: Tuple[type, ...] = (RuntimeError,)):
+        self.corruption_types = corruption_types
+        self.events: List[RecoveryEvent] = []
+
+    @property
+    def warm(self) -> bool:
+        """True when the last ``run`` served the restored artifact as-is."""
+        return bool(self.events) and self.events[-1].kind == "restored"
+
+    def run(self, load: Callable[[], object], rebuild: Callable[[], object],
+            save: Optional[Callable[[object], None]] = None):
+        """``load()`` (returning None when nothing is stored), falling back
+        to ``rebuild()`` on a missing or corrupt store; ``save`` persists the
+        rebuilt artifact so the NEXT boot is warm again."""
+        try:
+            out = load()
+        except self.corruption_types as e:
+            self.events.append(RecoveryEvent(
+                "corrupt", f"{type(e).__name__}: {e}"))
+            out = None
+        else:
+            if out is not None:
+                self.events.append(RecoveryEvent("restored"))
+                return out
+            self.events.append(RecoveryEvent("missing"))
+        out = rebuild()
+        if save is not None:
+            save(out)
+        self.events.append(RecoveryEvent("rebuilt"))
         return out
 
 

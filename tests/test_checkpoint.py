@@ -1,0 +1,140 @@
+"""Checkpoint store hardening: junk-entry tolerance in latest_step/_retain
+(regression for the serving warm-boot path), shape-free restore_tree, and
+corruption classification."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.checkpoint import (
+    CheckpointCorruptionError,
+    CheckpointManager,
+    gc_tmp,
+    latest_step,
+    restore,
+    restore_tree,
+    save,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "heads": {"krr": rng.standard_normal((3, 1)).astype(np.float32),
+                      "kpca": rng.standard_normal((3, 2)).astype(np.float32)},
+            "meta_json": np.asarray("hello")}
+
+
+# ---------------------------------------------------------------------------
+# latest_step/_retain must ignore junk directory entries (the regression:
+# a stale .tmp dir or half-deleted step made boot crash or restore nothing)
+# ---------------------------------------------------------------------------
+
+def test_latest_step_ignores_stale_tmp_dir(tmp_path):
+    save(str(tmp_path), 5, _tree())
+    os.makedirs(tmp_path / "step_000000777.tmp")   # crash mid-write leftover
+    assert latest_step(str(tmp_path)) == 5
+    # and restore of the reported step works while the tmp dir exists
+    out = restore(str(tmp_path), 5, _tree())
+    assert np.array_equal(out["w"], _tree()["w"])
+
+
+def test_latest_step_ignores_stray_file_and_manifestless_dir(tmp_path):
+    save(str(tmp_path), 3, _tree())
+    (tmp_path / "step_000000888").write_text("not a checkpoint")
+    os.makedirs(tmp_path / "step_000000555")       # gc/retention race: empty
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_latest_step_concurrent_gc_tmp(tmp_path):
+    """gc_tmp removing a stale write-in-flight never hides the committed
+    step (the serving boot runs both on the same directory)."""
+    save(str(tmp_path), 2, _tree())
+    os.makedirs(tmp_path / "step_000000004.tmp")
+    assert gc_tmp(str(tmp_path)) == 1
+    assert latest_step(str(tmp_path)) == 2
+    out = restore(str(tmp_path), 2, _tree())
+    assert np.array_equal(out["heads"]["kpca"], _tree()["heads"]["kpca"])
+
+
+def test_retain_survives_junk_entries(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    (tmp_path / "step_junkname").mkdir()           # int() used to crash here
+    (tmp_path / "step_000000999").write_text("stray file")
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _tree(step))
+    kept = sorted(n for n in os.listdir(tmp_path)
+                  if n.startswith("step_00000000"))
+    assert kept == ["step_000000003", "step_000000004"]
+    assert latest_step(str(tmp_path)) == 4
+
+
+# ---------------------------------------------------------------------------
+# restore_tree: shape-free reconstruction from the manifest
+# ---------------------------------------------------------------------------
+
+def test_restore_tree_nested_roundtrip(tmp_path):
+    tree = _tree(9)
+    save(str(tmp_path), 0, tree)
+    out = restore_tree(str(tmp_path), 0)
+    assert set(out) == {"w", "heads", "meta_json"}
+    assert set(out["heads"]) == {"krr", "kpca"}
+    assert np.array_equal(out["w"], tree["w"])
+    assert np.array_equal(out["heads"]["krr"], tree["heads"]["krr"])
+    assert str(np.asarray(out["meta_json"]).item()) == "hello"
+
+
+# ---------------------------------------------------------------------------
+# corruption classification
+# ---------------------------------------------------------------------------
+
+def test_truncated_manifest_raises_corruption_error(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    (tmp_path / "step_000000001" / "manifest.json").write_text('{"leaf_')
+    with pytest.raises(CheckpointCorruptionError):
+        restore_tree(str(tmp_path), 1)
+    with pytest.raises(CheckpointCorruptionError):
+        restore(str(tmp_path), 1, _tree())
+
+
+def test_missing_shards_raise_corruption_error(tmp_path):
+    save(str(tmp_path), 1, _tree())
+    step_dir = tmp_path / "step_000000001"
+    for name in os.listdir(step_dir):
+        if name.endswith(".npz"):
+            os.remove(step_dir / name)
+    with pytest.raises(CheckpointCorruptionError, match="no shard"):
+        restore_tree(str(tmp_path), 1)
+
+
+def test_healthy_mismatch_is_not_corruption(tmp_path):
+    """A checkpoint that reads fine but doesn't match ``like`` keeps raising
+    the plain structural errors — ArtifactRecovery must NOT swallow those."""
+    save(str(tmp_path), 1, _tree())
+    bad_like = _tree()
+    bad_like["w"] = np.zeros((2, 2), np.float32)
+    with pytest.raises(ValueError, match="shape"):
+        restore(str(tmp_path), 1, bad_like)
+    bad_like = _tree()
+    bad_like["extra"] = np.zeros((1,), np.float32)
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore(str(tmp_path), 1, bad_like)
+
+
+def test_corruption_error_is_runtime_error():
+    assert issubclass(ckpt.CheckpointCorruptionError, RuntimeError)
+
+
+def test_manifest_mapping_mismatch_is_corruption(tmp_path):
+    """Manifest whose keys don't cover the npz entries (torn write across
+    the two files) classifies as corruption, not a KeyError leak."""
+    save(str(tmp_path), 1, _tree())
+    man = tmp_path / "step_000000001" / "manifest.json"
+    with open(man) as f:
+        manifest = json.load(f)
+    manifest.pop(sorted(manifest)[0])
+    man.write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointCorruptionError):
+        restore_tree(str(tmp_path), 1)

@@ -241,7 +241,11 @@ def test_calibrated_specs_are_usable_end_to_end():
     """A calibrated spec must drop straight into fast_model for every
     registered family (principled bandwidths, not just plumbing)."""
     X = _clustered(11, n=300, d=6)
-    for name in pw_specs.registered_kernels():
+    # only the families with a calibration rule: other test modules register
+    # ad-hoc kernels in the (process-global) spec registry, and those have no
+    # streaming calibration to exercise here
+    for name in sorted(set(pw_specs.registered_kernels())
+                       & set(pw_cal.registered_calibrations())):
         cal = pw_cal.calibrate_sigma(X, spec=pw_specs.suggested_spec(name, 6),
                                      key=jax.random.PRNGKey(0))
         Kop = PairwiseKernel(X, cal)
