@@ -5,12 +5,16 @@ the *implementation* is too.  For each registered kernel (rbf, laplacian,
 matern32, polynomial, linear, plus anything user-registered) it runs the
 fused ``fast_model_with_error`` through a ``CountingOperator`` and reports
 wall-clock, measured kernel-entry counts, the sweep route taken
-(``pallas_fused`` / ``pallas_fused_sharded`` / ``panel``), and the Hutchinson
-relative error — one row per kernel, identical machinery for all of them.
+(``pallas_fused`` / ``pallas_fused_sharded`` / ``panel``, with a
+``+bf16_f32acc`` suffix under the mixed-precision policy), the l1dist route
+(``mxu_signsplit`` / ``vpu_loop``), the Hutchinson relative error, and an
+achieved-vs-roofline score for one dedicated timed launch — one row per
+kernel, identical machinery for all of them.
 
     PYTHONPATH=src python -m benchmarks.bench_kernels                # all
     PYTHONPATH=src python -m benchmarks.bench_kernels --kernel laplacian
     PYTHONPATH=src python -m benchmarks.bench_kernels --mesh         # shard
+    PYTHONPATH=src python -m benchmarks.bench_kernels --precision bf16_f32acc
 """
 from __future__ import annotations
 
@@ -26,16 +30,55 @@ from repro.core import spsd
 from repro.core.instrument import CountingOperator
 from repro.core.kernelop import PairwiseKernel
 from repro.kernels.pairwise import specs
+from repro.launch import roofline as roofline_lib
 
-def _clustered(seed: int, n: int, d: int = 8, k: int = 8) -> jnp.ndarray:
+
+def _clustered(seed: int, n: int, d: int = 8, k: int = 8,
+               grid: float = 0.5) -> jnp.ndarray:
+    """Clustered points snapped to a ``grid`` lattice.
+
+    The quantization mirrors the paper's laplacian evaluation data (letters /
+    pendigits / mushrooms are small-integer features) and keeps per-feature
+    cardinality within the sign-split segment budget, so the l1dist rows
+    exercise the MXU route the way the real workloads would.  ``grid=0``
+    disables snapping (continuous data — the VPU reference route).
+    """
     rng = np.random.default_rng(seed)
     centers = rng.normal(size=(k, d))
     X = centers[rng.integers(0, k, size=n)] + rng.normal(size=(n, d)) * 0.3
+    if grid:
+        X = np.round(X / grid) * grid
     return jnp.asarray(X, jnp.float32)
 
 
+def _roofline_row(op: PairwiseKernel, mesh, n: int, d: int,
+                  m: int = 128) -> dict:
+    """One dedicated timed fused launch, scored against the analytic model.
+
+    ``fast_model_with_error`` interleaves host-side factor algebra with its
+    launches, so its wall-clock is not a launch measurement; this times the
+    square multi-RHS launch alone (post-warmup) and scores it under
+    ``default_profile()`` (CPU-interpret numbers against CPU peaks).
+    """
+    V = jnp.asarray(np.random.default_rng(0).normal(size=(n, m)), jnp.float32)
+
+    def launch():
+        return jax.block_until_ready(op.fused_rows(None, (V,)))
+
+    launch()                                    # compile + warm the cache
+    t0 = time.perf_counter()
+    launch()
+    measured = time.perf_counter() - t0
+    edges = op.l1_edges()
+    return roofline_lib.achieved_vs_roofline(
+        op.spec, (n, n, d), mesh, measured_s=measured, m_total=m,
+        l1_route=op.l1_route(),
+        segments=0 if edges is None else int(edges.shape[1]) + 1)
+
+
 def run(kernels=None, n: int = 400, c: int = 16, probes: int = 8,
-        seed: int = 0, mesh=None, use_pallas: bool = True):
+        seed: int = 0, mesh=None, use_pallas: bool = True,
+        precision: str = "f32", with_roofline: bool = True):
     """One fused model+error pass per kernel; returns the per-kernel rows."""
     kernels = list(kernels) if kernels else list(specs.registered_kernels())
     X = _clustered(seed, n)
@@ -44,22 +87,33 @@ def run(kernels=None, n: int = 400, c: int = 16, probes: int = 8,
         # the shared registry-sweep parameterization (entries O(1) on
         # standardized data; custom kernels use their factory defaults)
         spec = specs.suggested_spec(name, X.shape[1])
-        Kc = CountingOperator(PairwiseKernel(X, spec, use_pallas=use_pallas))
+        spec = spec.with_precision(precision)
+        op = PairwiseKernel(X, spec, use_pallas=use_pallas)
+        Kc = CountingOperator(op)
         t0 = time.perf_counter()
         ap, err = spsd.fast_model_with_error(
             Kc, jax.random.PRNGKey(seed), c=c, s=4 * c, s_sketch="gaussian",
             probes=probes, mesh=mesh)
         jax.block_until_ready(ap.U)
         dt = time.perf_counter() - t0
-        rows.append(dict(kernel=name, seconds=round(dt, 3),
-                         entries=Kc.counts["entries"],
-                         sweeps=Kc.counts["sweeps"], route=Kc.last_route,
-                         rel_err=float(err)))
+        row = dict(kernel=name, seconds=round(dt, 3),
+                   entries=Kc.counts["entries"],
+                   sweeps=Kc.counts["sweeps"], route=Kc.last_route,
+                   precision=precision, l1_route=op.l1_route(),
+                   rel_err=float(err))
+        if with_roofline and use_pallas:
+            row["roofline"] = _roofline_row(op, mesh, n, X.shape[1])
+        rows.append(row)
     print_table(
-        f"kernel registry sweep (n={n}, c={c}, s={4 * c}, fused model+error)",
-        ["kernel", "s", "#K entries", "sweeps", "route", "rel err"],
+        f"kernel registry sweep (n={n}, c={c}, s={4 * c}, "
+        f"precision={precision}, fused model+error)",
+        ["kernel", "s", "#K entries", "sweeps", "route", "l1 route",
+         "rel err", "roof%"],
         [(r["kernel"], f"{r['seconds']:7.3f}", f"{r['entries']:>12,}",
-          r["sweeps"], r["route"], f"{r['rel_err']:.5f}") for r in rows])
+          r["sweeps"], r["route"], r["l1_route"] or "-",
+          f"{r['rel_err']:.5f}",
+          f"{100 * r['roofline']['achieved_frac']:.2f}%"
+          if "roofline" in r else "-") for r in rows])
     return rows
 
 
@@ -76,13 +130,16 @@ def main(argv=None):
                         "devices (exercises the pallas_fused_sharded route)")
     p.add_argument("--no-pallas", action="store_true",
                    help="force the jnp panel route (baseline)")
+    p.add_argument("--precision", default="f32", choices=specs.PRECISIONS,
+                   help="tile-evaluation policy for every launch "
+                        "(bf16_f32acc: bf16 tiles, f32 accumulators)")
     args = p.parse_args(argv)
     mesh = None
     if args.mesh:
         from repro.distributed import data_parallel_mesh
         mesh = data_parallel_mesh()
     run(kernels=args.kernel, n=args.n, c=args.c, probes=args.probes,
-        mesh=mesh, use_pallas=not args.no_pallas)
+        mesh=mesh, use_pallas=not args.no_pallas, precision=args.precision)
     return 0
 
 

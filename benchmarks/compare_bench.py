@@ -92,6 +92,39 @@ def compare(fresh: dict, base: dict, tol_speedup: float = 0.5,
     for name in sorted(set(b_k) - set(f_k)):
         advisories.append(f"kernels {name}: row dropped from fresh payload")
 
+    # -- kernels_bf16: advisory-first (new section; promote once the bf16
+    # trajectory has a few PRs of history behind it) ------------------------
+    f_bk = _index(fresh.get("kernels_bf16", []), "kernel")
+    b_bk = _index(base.get("kernels_bf16", []), "kernel")
+    for name in sorted(set(f_bk) & set(b_bk)):
+        f, b = f_bk[name], b_bk[name]
+        if f["rel_err"] > err_bound(b["rel_err"]):
+            advisories.append(
+                f"kernels_bf16 {name}: rel_err {f['rel_err']:.4g} > "
+                f"{err_bound(b['rel_err']):.4g} bound "
+                f"(baseline {b['rel_err']:.4g})")
+        if f.get("l1_route") != b.get("l1_route"):
+            advisories.append(
+                f"kernels_bf16 {name}: l1 route {b.get('l1_route')} -> "
+                f"{f.get('l1_route')}")
+
+    # -- roofline: advisory-only (achieved fractions at smoke shapes on CI
+    # runners measure the runner; route/profile flips are still worth eyes) -
+    f_roof = {(r["kernel"], r["precision"]): r
+              for r in fresh.get("roofline", [])}
+    b_roof = {(r["kernel"], r["precision"]): r
+              for r in base.get("roofline", [])}
+    for key in sorted(set(f_roof) & set(b_roof)):
+        f, b = f_roof[key], b_roof[key]
+        advisories.append(
+            f"roofline {key[0]}/{key[1]}: achieved "
+            f"{b['achieved_frac']:.3f} -> {f['achieved_frac']:.3f} "
+            f"({f['bottleneck']}-bound)")
+        if f.get("l1_route") != b.get("l1_route"):
+            advisories.append(
+                f"roofline {key[0]}/{key[1]}: l1 route "
+                f"{b.get('l1_route')} -> {f.get('l1_route')}")
+
     # -- advisory-only sections ---------------------------------------------
     f_serve = _index(fresh.get("serve", []), "clients")
     b_serve = _index(base.get("serve", []), "clients")

@@ -81,17 +81,39 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
         "cur_streaming_selection",
         lambda: bench_cur.run_streaming_selection(n=800, c=32, sc=64))
     kernels = step("kernels", lambda: bench_kernels.run())
+    kernels_bf16 = step("kernels_bf16",
+                        lambda: bench_kernels.run(precision="bf16_f32acc"))
     serve = step("serve", lambda: bench_serve.run(loads=(1, 2, 8),
                                                   requests_per_client=6))
+
+    # achieved-vs-roofline per launch, pulled out of the kernel rows so the
+    # perf trajectory is one flat section (and one CI artifact) per PR
+    roofline = [
+        {"kernel": r["kernel"], "precision": r["precision"],
+         **r["roofline"]}
+        for r in kernels + kernels_bf16 if "roofline" in r]
+    l1_routes = {r["precision"]: r["l1_route"]
+                 for r in kernels + kernels_bf16
+                 if r["kernel"] == "laplacian"}
 
     payload = {
         "total_seconds": round(time.time() - t0, 3),
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "meta": {
+            # which tile policies the sweep exercised and which l1dist form
+            # the laplacian rows took (mxu_signsplit | vpu_loop)
+            "precision_policies": sorted({r["precision"]
+                                          for r in kernels + kernels_bf16}),
+            "l1dist_route": l1_routes,
+            "roofline_profile": roofline[0]["profile"] if roofline else None,
+        },
         "steps_seconds": steps,
         "scaling": scaling,
         "kernels": kernels,
+        "kernels_bf16": kernels_bf16,
+        "roofline": roofline,
         "cur_streaming_selection": cur_selection,
         "serve": serve,
     }
@@ -100,6 +122,12 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
         os.makedirs(out_dir, exist_ok=True)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
+    # standalone roofline report next to the smoke JSON (CI uploads it as its
+    # own artifact so launch-efficiency trends are greppable without the rest
+    # of the payload)
+    roofline_out = os.path.join(out_dir or ".", "ROOFLINE_smoke.json")
+    with open(roofline_out, "w") as f:
+        json.dump({"meta": payload["meta"], "roofline": roofline}, f, indent=2)
     tracked = tracked_json_path(tag or default_tag())
     with open(tracked, "w") as f:            # tracked copy at the repo root
         json.dump(payload, f, indent=2)

@@ -18,7 +18,13 @@ panels regardless of how ``jax.lax.scan`` re-executes the traced body):
 - ``fused_sweeps`` : the subset of ``sweeps`` the inner operator claimed
                 with a fused Pallas launch (single-device multi-RHS or the
                 per-shard slab route); ``last_route`` records the most
-                recent routing decision verbatim
+                recent routing decision verbatim (including any
+                ``+bf16_f32acc`` precision suffix)
+- ``bf16_sweeps`` : the subset of sweeps/cross launches evaluated under a
+                non-f32 tile-precision policy; ``last_precision`` records
+                the policy of the most recent launch and ``last_slab_mode``
+                whether a sharded claim used the scalar-prefetch slab
+                launch ('prefetch') or the gathered row copy ('gather')
 - ``blocks`` / ``columns`` / ``diags`` / ``fulls`` : direct-access calls
 
 Used by the parity/entry-count tests (fast_model + streaming error must stay
@@ -44,8 +50,11 @@ class CountingOperator(SPSDOperator):
     def reset(self):
         self.counts = {"sweeps": 0, "panels": 0, "entries": 0,
                        "fused_sweeps": 0, "cross_sweeps": 0,
+                       "bf16_sweeps": 0,
                        "blocks": 0, "columns": 0, "diags": 0, "fulls": 0}
         self.last_route = None
+        self.last_precision = None
+        self.last_slab_mode = None
         self._in_sweep = False
 
     @property
@@ -99,11 +108,17 @@ class CountingOperator(SPSDOperator):
             self._in_sweep = False
         # attribute the route only on success, so a sweep that raised before
         # dispatching can never inherit the previous call's routing decision
-        route = getattr(self.inner, "_last_sweep_route", "panel")
+        self._attribute(getattr(self.inner, "_last_sweep_route", "panel"))
+        return out
+
+    def _attribute(self, route: str):
         self.last_route = route
+        self.last_precision = getattr(self.inner, "precision", "f32")
+        self.last_slab_mode = getattr(self.inner, "_last_slab_mode", None)
         if route.startswith("pallas_fused"):
             self.counts["fused_sweeps"] += 1
-        return out
+        if self.last_precision != "f32":
+            self.counts["bf16_sweeps"] += 1
 
     def cross(self, Xq, Vs):
         """Query-side rectangular launches (``repro.serve``): one
@@ -112,10 +127,8 @@ class CountingOperator(SPSDOperator):
         self.counts["cross_sweeps"] += 1
         self.counts["entries"] += int(Xq.shape[0]) * self.n
         out = self.inner.cross(Xq, Vs)
-        route = getattr(self.inner, "_last_sweep_route", "dense_rows")
-        self.last_route = route
-        if route.startswith("pallas_fused"):
-            self.counts["fused_sweeps"] += 1
+        self._attribute(getattr(self.inner, "_last_sweep_route",
+                                "dense_rows"))
         return out
 
     def map_row_panels(self, fn, block_size: Optional[int] = None):

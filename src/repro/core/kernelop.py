@@ -86,6 +86,13 @@ class SPSDOperator:
 
     # -- fused-sweep capability protocol (see sweep.sweep_operator) ---------
 
+    @property
+    def precision(self) -> str:
+        """Tile-evaluation precision policy of this operator's launches
+        (``'f32'`` unless the backing spec says otherwise) — recorded on
+        ``_last_sweep_route`` by the sweep engine."""
+        return "f32"
+
     def supports_fused_matmat(self) -> bool:
         """True when ``fused_rows`` answers matmul-shaped plan bundles."""
         return False
@@ -93,6 +100,18 @@ class SPSDOperator:
     def fused_rows(self, row_idx: Optional[jnp.ndarray], Vs):
         """[K[row_idx, :] @ V for V in Vs] in one fused launch (row_idx=None
         -> all rows).  Only called when ``supports_fused_matmat()``."""
+        raise NotImplementedError
+
+    def supports_prefetch_slab(self) -> bool:
+        """True when ``fused_slab`` can answer a contiguous row slab with a
+        scalar-prefetch launch (no gathered row copy)."""
+        return False
+
+    def fused_slab(self, start_row, slab_len: int, Vs):
+        """[K[start:start+slab_len, :] @ V for V in Vs] with the slab
+        addressed inside the launch (``start_row`` may be traced).  Rows at
+        indices ≥ n are clamp duplicates the caller must mask.  Only called
+        when ``supports_prefetch_slab()``."""
         raise NotImplementedError
 
     def cross(self, Xq: jnp.ndarray, Vs):
@@ -239,13 +258,52 @@ class PairwiseKernel(SPSDOperator):
     def n(self) -> int:
         return int(self.X.shape[0])
 
+    @property
+    def precision(self) -> str:
+        return self.spec.precision
+
+    def with_precision(self, precision: str) -> "PairwiseKernel":
+        """This operator under another tile-precision policy (same data,
+        same routing; the spec variant is cached so jit keys stay stable)."""
+        return PairwiseKernel(self.X, self.spec.with_precision(precision),
+                              self.use_pallas)
+
+    def l1_edges(self) -> Optional[jnp.ndarray]:
+        """Sign-split segment table for the MXU l1dist route, or None.
+
+        Built lazily (one host-side pass over X) and cached on the instance.
+        None — the VPU reference route — for non-l1dist statistics, traced
+        X (unflattened inside jit; such instances are ephemeral, nothing is
+        cached), and data whose per-feature cardinality exceeds the segment
+        budget (``signsplit.MAX_SEGMENTS``).
+        """
+        if self.spec.stat != "l1dist":
+            return None
+        if not hasattr(self, "_l1_edges_cache"):
+            from repro.kernels.pairwise import signsplit
+            plan = signsplit.build_plan(self.X)
+            edges = None if plan is None else plan.edges
+            if isinstance(self.X, jax.core.Tracer):
+                return edges
+            self._l1_edges_cache = edges
+        return self._l1_edges_cache
+
+    def l1_route(self) -> Optional[str]:
+        """Which l1dist route this operator's launches take
+        ('mxu_signsplit' | 'vpu_loop'; None for non-l1dist statistics) —
+        surfaced in bench metadata so perf regressions are attributable."""
+        if self.spec.stat != "l1dist":
+            return None
+        return "mxu_signsplit" if self.l1_edges() is not None else "vpu_loop"
+
     def block(self, row_idx, col_idx):
         Xr = jnp.take(self.X, row_idx, axis=0)
         Xc = jnp.take(self.X, col_idx, axis=0)
         if self.use_pallas:
             from repro.kernels.pairwise import ops as pw_ops
-            return pw_ops.kernel_block(self.spec, Xr, Xc)
-        return pairwise_specs.apply(self.spec, Xr, Xc)
+            return pw_ops.kernel_block(self.spec, Xr, Xc,
+                                       edges=self.l1_edges())
+        return pairwise_specs.apply(self.spec, Xr, Xc, self.l1_edges())
 
     def columns(self, idx):
         # n·c entries straight from the data: no n-length row index, no row
@@ -253,11 +311,13 @@ class PairwiseKernel(SPSDOperator):
         Xc = jnp.take(self.X, idx, axis=0)
         if self.use_pallas:
             from repro.kernels.pairwise import ops as pw_ops
-            return pw_ops.kernel_block(self.spec, self.X, Xc)
-        return pairwise_specs.apply(self.spec, self.X, Xc)
+            return pw_ops.kernel_block(self.spec, self.X, Xc,
+                                       edges=self.l1_edges())
+        return pairwise_specs.apply(self.spec, self.X, Xc, self.l1_edges())
 
     def full(self):
-        return pairwise_specs.apply(self.spec, self.X, self.X)
+        return pairwise_specs.apply(self.spec, self.X, self.X,
+                                    self.l1_edges())
 
     def diag(self):
         # O(n·d), touches no off-diagonal entry (constant for distance
@@ -284,7 +344,21 @@ class PairwiseKernel(SPSDOperator):
         all-rows launch)."""
         from repro.kernels.pairwise import ops as pw_ops
         Xr = self.X if row_idx is None else jnp.take(self.X, row_idx, axis=0)
-        return pw_ops.kernel_matmat_multi_rows(self.spec, Xr, self.X, Vs)
+        return pw_ops.kernel_matmat_multi_rows(self.spec, Xr, self.X, Vs,
+                                               edges=self.l1_edges())
+
+    def supports_prefetch_slab(self) -> bool:
+        return bool(self.use_pallas)
+
+    def fused_slab(self, start_row, slab_len, Vs):
+        """The scalar-prefetch slab launch: the shard's contiguous row range
+        is addressed inside the kernel via a prefetched row-block offset
+        (``ops.kernel_matmat_multi_slab``), so no per-device row-slice copy
+        of X is ever gathered."""
+        from repro.kernels.pairwise import ops as pw_ops
+        return pw_ops.kernel_matmat_multi_slab(
+            self.spec, self.X, start_row, int(slab_len), Vs,
+            edges=self.l1_edges())
 
     def cross(self, Xq, Vs):
         """[K(Xq, X) @ V for V in Vs] — the serving-path query launch.
@@ -294,13 +368,18 @@ class PairwiseKernel(SPSDOperator):
         is computed tile-by-tile in VMEM (``use_pallas``) and contracted
         against every head matrix in ONE launch, so a whole heterogeneous
         query bucket (KRR predictions + KPCA projections + feature maps)
-        costs one evaluation of each cross-kernel entry.  The route is
-        recorded on ``_last_sweep_route`` like every sweep
-        (``pallas_fused_rows`` / ``dense_rows``).
+        costs one evaluation of each cross-kernel entry.  The route — and
+        the precision policy, as a ``+bf16_f32acc`` suffix — is recorded on
+        ``_last_sweep_route`` like every sweep (``pallas_fused_rows`` /
+        ``dense_rows``).  The sign-split l1 route is NOT used here: its
+        exactness contract covers values of this operator's own X, and
+        query points are out-of-sample.
         """
         from repro.kernels.pairwise import ops as pw_ops
-        self._last_sweep_route = ("pallas_fused_rows" if self.use_pallas
-                                  else "dense_rows")
+        route = "pallas_fused_rows" if self.use_pallas else "dense_rows"
+        if self.precision != "f32":
+            route += "+" + self.precision
+        self._last_sweep_route = route
         return pw_ops.kernel_matmat_multi_rows(
             self.spec, jnp.asarray(Xq), self.X, tuple(Vs),
             use_pallas=self.use_pallas)

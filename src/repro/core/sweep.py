@@ -404,17 +404,32 @@ def sweep_operator(op, plans: Sequence, block_size: Optional[int] = None,
     plans = list(plans)
     n = op.n
     fused = op.supports_fused_matmat() and is_matmul_shaped(plans)
+    # the precision policy rides the route string as a suffix ('pallas_fused'
+    # stays 'pallas_fused' under the default f32 policy, so route assertions
+    # and startswith-based metering are unchanged)
+    prec = getattr(op, "precision", "f32")
+    suffix = "" if prec == "f32" else "+" + prec
+    op._last_slab_mode = None          # only sharded fused claims set this
     if fused and mesh_data_size(mesh) <= 1:
-        op._last_sweep_route = "pallas_fused"
+        op._last_sweep_route = "pallas_fused" + suffix
         return list(op.fused_rows(None, fused_right_hand_sides(plans, n)))
     if fused:
-        op._last_sweep_route = "pallas_fused_sharded"
+        op._last_sweep_route = "pallas_fused_sharded" + suffix
         Vs = fused_right_hand_sides(plans, n)
+        use_slab = op.supports_prefetch_slab()
+        op._last_slab_mode = "prefetch" if use_slab else "gather"
 
         def slab_fn(row_idx, valid):
             # One rectangular launch for this shard's row slab: only the
-            # slab's kernel tiles are evaluated, each exactly once.
-            outs = op.fused_rows(row_idx, Vs)
+            # slab's kernel tiles are evaluated, each exactly once.  The
+            # scalar-prefetch claim addresses the slab inside the launch
+            # (row_idx[0] is the slab start — clamped starts only occur on
+            # all-sentinel shards, whose contributions ``valid`` zeroes);
+            # the gather claim materializes the row slice.
+            if use_slab:
+                outs = op.fused_slab(row_idx[0], row_idx.shape[0], Vs)
+            else:
+                outs = op.fused_rows(row_idx, Vs)
             v = valid.astype(jnp.float32)[:, None]
             return tuple(p.init(n, n).at[row_idx].add(o * v)
                          for p, o in zip(plans, outs))

@@ -9,17 +9,27 @@ staged in HBM:
 - ``pairwise_block_padded``        one K block (the S^T K S / C panel path),
 - ``pairwise_matmat_multi_padded`` [K(Xr, Xc) @ V for V in Vs] with each
   kernel tile computed ONCE and contracted against every right-hand side —
-  the single-sweep panel engine at the kernel-tile level, and (with Xr a
-  contiguous row slab of Xc) the shard_map per-device fast path.
+  the single-sweep panel engine at the kernel-tile level,
+- ``pairwise_matmat_multi_slab``   the shard_map per-device fast path: the
+  row slab is addressed INSIDE the launch via a scalar-prefetch row-offset
+  index map (``PrefetchScalarGridSpec``), so each device's grid walks its
+  contiguous block range of the shared padded X instead of contracting a
+  gathered copy.
 
 Statistics (``KernelSpec.stat``):
 
 - ``'dot'``     xᵀy — one MXU contraction.
 - ``'sqdist'``  ‖x−y‖₂² — MXU cross term + VPU norms/combine.
-- ``'l1dist'``  ‖x−y‖₁ — no MXU form; a VPU ``fori_loop`` over the feature
-  axis accumulates |x_k − y_k| into the (BLOCK_R, BLOCK_C) tile, keeping the
-  VMEM working set independent of d (the broadcast form would stage a
-  (BLOCK_R, BLOCK_C, d) temporary).
+- ``'l1dist'``  ‖x−y‖₁ — with a sign-split segment table (``edges``) two MXU
+  contractions over per-point segment embeddings built in VMEM
+  (``repro.kernels.pairwise.signsplit``); without one, the reference VPU
+  ``fori_loop`` over the feature axis (live set independent of d).
+
+Precision (``KernelSpec.precision``): point tiles and the kernel tile are
+quantized to ``spec.tile_dtype()`` (bf16 under ``bf16_f32acc``); every MXU
+contraction accumulates f32 via ``preferred_element_type``; ``entry_fn``
+always sees an f32 statistic.  The dense fallback (``specs.stat_block``)
+applies the identical policy, so routes stay comparable per mode.
 
 Output tiles are (128, 128) MXU/lane aligned; HBM traffic stays
 O((nr + nc)·d + Σ nc·m_i + Σ nr·m_i) — the Table-3 "#Entries" story for the
@@ -32,6 +42,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pairwise.specs import KernelSpec, stat_block
 
@@ -39,36 +50,60 @@ BLOCK_R = 128
 BLOCK_C = 128
 
 
-def _entry_tile(xr_ref, xc_ref, spec: KernelSpec) -> jnp.ndarray:
-    """One (BLOCK_R, BLOCK_C) tile of kernel entries from two VMEM point
+def _entry_tile(xr_ref, xc_ref, spec: KernelSpec,
+                e_ref=None) -> jnp.ndarray:
+    """One (BLOCK_R, BLOCK_C) f32 tile of kernel entries from two VMEM point
     tiles.  The statistic math is shared verbatim with the dense fallback
-    (``specs.stat_block``: MXU cross products for dot/sqdist, the
-    d-independent VPU ``fori_loop`` accumulator for l1dist), so the Pallas
-    and panel routes can never diverge."""
-    xr = xr_ref[...].astype(jnp.float32)
-    xc = xc_ref[...].astype(jnp.float32)
-    return spec.entry_fn(stat_block(spec.stat, xr, xc))
+    (``specs.stat_block``: MXU contractions for dot/sqdist and the
+    sign-split l1 route, the d-independent VPU ``fori_loop`` otherwise), so
+    the Pallas and panel routes can never diverge.  Point tiles are
+    quantized to the spec's precision policy; the statistic and ``entry_fn``
+    run in f32."""
+    dt = spec.tile_dtype()
+    xr = xr_ref[...].astype(dt)
+    xc = xc_ref[...].astype(dt)
+    edges = e_ref[...] if e_ref is not None else None
+    return spec.entry_fn(
+        stat_block(spec.stat, xr, xc, spec.precision, edges))
 
 
-def _pairwise_block_kernel(xr_ref, xc_ref, o_ref, *, spec: KernelSpec):
+def _contract_tile(k_tile, v_ref, spec: KernelSpec) -> jnp.ndarray:
+    """K-tile × V-tile under the precision policy: operands quantized to the
+    tile dtype, f32 partial sums on the MXU."""
+    dt = spec.tile_dtype()
+    return jax.lax.dot_general(
+        k_tile.astype(dt), v_ref[...].astype(dt),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _pairwise_block_kernel(xr_ref, xc_ref, *refs, spec: KernelSpec,
+                           has_edges: bool):
     """One (BLOCK_R, BLOCK_C) output tile of kernel entries.
 
     xr_ref: (BLOCK_R, d) VMEM tile of row points
     xc_ref: (BLOCK_C, d) VMEM tile of column points
-    o_ref:  (BLOCK_R, BLOCK_C) VMEM output tile
+    refs:   optional (d, B−1) sign-split edge table, then the
+            (BLOCK_R, BLOCK_C) VMEM output tile
     """
-    o_ref[...] = _entry_tile(xr_ref, xc_ref, spec)
+    e_ref = refs[0] if has_edges else None
+    o_ref = refs[-1]
+    o_ref[...] = _entry_tile(xr_ref, xc_ref, spec, e_ref)
 
 
 def _pairwise_matmat_multi_kernel(xr_ref, xc_ref, *refs, spec: KernelSpec,
-                                  nv: int):
+                                  nv: int, has_edges: bool):
     """Multi-right-hand-side fusion: one K tile, ``nv`` contractions.
 
     The (BLOCK_R, BLOCK_C) kernel tile is produced once and immediately
     contracted against every (BLOCK_C, m_i) right-hand tile while still in
-    VMEM.  ``refs`` is ``nv`` V refs followed by ``nv`` output accumulator
-    refs; the column-tile grid axis j walks the contraction.
+    VMEM.  ``refs`` is an optional edge-table ref, then ``nv`` V refs, then
+    ``nv`` output accumulator refs; the column-tile grid axis j walks the
+    contraction.
     """
+    e_ref = refs[0] if has_edges else None
+    refs = refs[1:] if has_edges else refs
     v_refs, o_refs = refs[:nv], refs[nv:]
     j = pl.program_id(1)
 
@@ -77,28 +112,31 @@ def _pairwise_matmat_multi_kernel(xr_ref, xc_ref, *refs, spec: KernelSpec,
         for o_ref in o_refs:
             o_ref[...] = jnp.zeros_like(o_ref)
 
-    k_tile = _entry_tile(xr_ref, xc_ref, spec)
+    k_tile = _entry_tile(xr_ref, xc_ref, spec, e_ref)
     for v_ref, o_ref in zip(v_refs, o_refs):
-        o_ref[...] += jax.lax.dot_general(
-            k_tile, v_ref[...].astype(jnp.float32),
-            dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
+        o_ref[...] += _contract_tile(k_tile, v_ref, spec)
+
+
+def _edge_in_spec(edges, extra_grid_args: int = 0):
+    """BlockSpec broadcasting the whole (d, B−1) edge table to every tile."""
+    if extra_grid_args:
+        return pl.BlockSpec(edges.shape, lambda i, j, *_: (0, 0))
+    return pl.BlockSpec(edges.shape, lambda i, j: (0, 0))
 
 
 def pairwise_matmat_multi_padded(spec: KernelSpec, Xr: jnp.ndarray,
                                  Xc: jnp.ndarray, Vs,
-                                 interpret: bool = False):
+                                 interpret: bool = False, edges=None):
     """[K(Xr, Xc) @ V for V in Vs] over padded inputs, one kernel launch.
 
     ``Xr`` and ``Xc`` may differ: the grid is rectangular
-    (nr/BLOCK_R × nc/BLOCK_C), which is how the shard_map sweep fast path
-    launches one row *slab* per device — ``Xr`` is the device's contiguous
-    row range of the point set, ``Xc`` the full set, so each device computes
-    only its slab's kernel tiles in VMEM and contracts them against every
-    right-hand side exactly once.  Padded column points produce garbage
-    kernel entries that meet zero-padded V rows, so their contribution
-    vanishes for every ``entry_fn``.
+    (nr/BLOCK_R × nc/BLOCK_C), which is how a row *slab* of the kernel is
+    evaluated against the full point set — each grid row computes only its
+    slab's kernel tiles in VMEM and contracts them against every right-hand
+    side exactly once.  Padded column points produce garbage kernel entries
+    that meet zero-padded V rows, so their contribution vanishes for every
+    ``entry_fn``.  ``edges`` (optional) selects the sign-split MXU route for
+    l1dist specs.
     """
     nr, d = Xr.shape
     nc = Xc.shape[0]
@@ -106,17 +144,24 @@ def pairwise_matmat_multi_padded(spec: KernelSpec, Xr: jnp.ndarray,
     for V in Vs:
         assert V.shape[0] == nc and V.shape[1] % 128 == 0, V.shape
     grid = (nr // BLOCK_R, nc // BLOCK_C)
+    has_edges = edges is not None
+    in_specs = [
+        pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
+    ]
+    operands = [Xr, Xc]
+    if has_edges:
+        in_specs.append(_edge_in_spec(edges))
+        operands.append(edges)
+    in_specs += [
+        pl.BlockSpec((BLOCK_C, V.shape[1]), lambda i, j: (j, 0))
+        for V in Vs
+    ]
     return pl.pallas_call(
         functools.partial(_pairwise_matmat_multi_kernel, spec=spec,
-                          nv=len(Vs)),
+                          nv=len(Vs), has_edges=has_edges),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
-        ] + [
-            pl.BlockSpec((BLOCK_C, V.shape[1]), lambda i, j: (j, 0))
-            for V in Vs
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((BLOCK_R, V.shape[1]), lambda i, j: (i, 0))
             for V in Vs
@@ -124,24 +169,98 @@ def pairwise_matmat_multi_padded(spec: KernelSpec, Xr: jnp.ndarray,
         out_shape=[jax.ShapeDtypeStruct((nr, V.shape[1]), jnp.float32)
                    for V in Vs],
         interpret=interpret,
-    )(Xr, Xc, *Vs)
+    )(*operands, *Vs)
+
+
+def _pairwise_matmat_slab_kernel(off_ref, xr_ref, xc_ref, *refs,
+                                 spec: KernelSpec, nv: int, has_edges: bool):
+    """Slab-launch body: identical math to the multi kernel; ``off_ref`` (the
+    prefetched row-block offset) is consumed by the index maps, not here."""
+    del off_ref
+    _pairwise_matmat_multi_kernel(xr_ref, xc_ref, *refs, spec=spec, nv=nv,
+                                  has_edges=has_edges)
+
+
+def pairwise_matmat_multi_slab(spec: KernelSpec, X: jnp.ndarray,
+                               off_blocks: jnp.ndarray, nblocks_r: int, Vs,
+                               interpret: bool = False, edges=None):
+    """[K(X[slab], X) @ V for V in Vs] with the slab addressed in-launch.
+
+    The scalar-prefetch replacement for gather-then-launch: ``off_blocks``
+    (a traced (1,) int32 — the slab's first 128-row block of the shared
+    padded ``X``) rides ``PrefetchScalarGridSpec``, and the row point tile's
+    index map adds it to the grid row index.  Each device of a shard_map
+    sweep therefore walks its contiguous block range of the SAME operand
+    ``X`` — no per-device row-slice copy of the point set is materialized,
+    and one compiled launch serves every slab position.  Row-block indices
+    are clamped to the last block so a tail slab reads (and the caller
+    discards) duplicate rows instead of reading out of bounds.
+    """
+    n, d = X.shape
+    assert n % BLOCK_R == 0, n
+    max_block = n // BLOCK_R - 1
+    nr = nblocks_r * BLOCK_R
+    for V in Vs:
+        assert V.shape[0] == n and V.shape[1] % 128 == 0, V.shape
+
+    def row_map(i, j, off_ref):
+        return (jnp.minimum(off_ref[0] + i, max_block), 0)
+
+    in_specs = [
+        pl.BlockSpec((BLOCK_R, d), row_map),
+        pl.BlockSpec((BLOCK_C, d), lambda i, j, off_ref: (j, 0)),
+    ]
+    operands = [X, X]
+    has_edges = edges is not None
+    if has_edges:
+        in_specs.append(_edge_in_spec(edges, extra_grid_args=1))
+        operands.append(edges)
+    in_specs += [
+        pl.BlockSpec((BLOCK_C, V.shape[1]), lambda i, j, off_ref: (j, 0))
+        for V in Vs
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nblocks_r, n // BLOCK_C),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((BLOCK_R, V.shape[1]), lambda i, j, off_ref: (i, 0))
+            for V in Vs
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_pairwise_matmat_slab_kernel, spec=spec,
+                          nv=len(Vs), has_edges=has_edges),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((nr, V.shape[1]), jnp.float32)
+                   for V in Vs],
+        interpret=interpret,
+    )(jnp.asarray(off_blocks, jnp.int32).reshape((1,)), *operands, *Vs)
 
 
 def pairwise_block_padded(spec: KernelSpec, Xr: jnp.ndarray, Xc: jnp.ndarray,
-                          interpret: bool = False) -> jnp.ndarray:
+                          interpret: bool = False,
+                          edges=None) -> jnp.ndarray:
     """Pallas call over padded inputs; shapes must be multiples of the tiles."""
     nr, d = Xr.shape
     nc = Xc.shape[0]
     assert nr % BLOCK_R == 0 and nc % BLOCK_C == 0, (nr, nc)
     grid = (nr // BLOCK_R, nc // BLOCK_C)
+    has_edges = edges is not None
+    in_specs = [
+        pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
+    ]
+    operands = [Xr, Xc]
+    if has_edges:
+        in_specs.append(_edge_in_spec(edges))
+        operands.append(edges)
     return pl.pallas_call(
-        functools.partial(_pairwise_block_kernel, spec=spec),
+        functools.partial(_pairwise_block_kernel, spec=spec,
+                          has_edges=has_edges),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((BLOCK_R, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((BLOCK_C, d), lambda i, j: (j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((BLOCK_R, BLOCK_C), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nr, nc), jnp.float32),
         interpret=interpret,
-    )(Xr, Xc)
+    )(*operands)

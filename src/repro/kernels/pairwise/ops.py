@@ -52,63 +52,137 @@ def _pad_cols(V: jnp.ndarray, mult: int) -> jnp.ndarray:
 
 
 @partial(jax.jit, static_argnames=("spec", "use_pallas", "interpret"))
-def _kernel_block_jit(Xr: jnp.ndarray, Xc: jnp.ndarray, spec: KernelSpec,
-                      use_pallas: bool, interpret: bool) -> jnp.ndarray:
+def _kernel_block_jit(Xr: jnp.ndarray, Xc: jnp.ndarray, edges,
+                      spec: KernelSpec, use_pallas: bool,
+                      interpret: bool) -> jnp.ndarray:
     if not use_pallas:
-        return _specs.apply(spec, Xr, Xc)
+        return _specs.apply(spec, Xr, Xc, edges)
     nr, nc = Xr.shape[0], Xc.shape[0]
     Xrp = _pad_rows(Xr, _k.BLOCK_R)
     Xcp = _pad_rows(Xc, _k.BLOCK_C)
-    out = _k.pairwise_block_padded(spec, Xrp, Xcp, interpret=interpret)
+    out = _k.pairwise_block_padded(spec, Xrp, Xcp, interpret=interpret,
+                                   edges=edges)
     return out[:nr, :nc]
 
 
 def kernel_block(spec: KernelSpec, Xr: jnp.ndarray, Xc: jnp.ndarray,
-                 use_pallas: bool = True,
-                 interpret: bool | None = None) -> jnp.ndarray:
-    """K-block entry_fn(stat(x_r, x_c)) of shape (len(Xr), len(Xc))."""
+                 use_pallas: bool = True, interpret: bool | None = None,
+                 edges: jnp.ndarray | None = None) -> jnp.ndarray:
+    """K-block entry_fn(stat(x_r, x_c)) of shape (len(Xr), len(Xc)).
+
+    ``edges`` (a sign-split segment table, see
+    ``repro.kernels.pairwise.signsplit``) opts l1dist statistics into the
+    MXU route; ``None`` — and every non-l1dist stat — keeps the reference
+    path.  ``None`` vs array is a pytree-structure change, so each choice
+    costs one jit entry per spec, as before.
+    """
     if interpret is None:
         interpret = _interpret_mode()
-    return _kernel_block_jit(Xr, Xc, spec, use_pallas, interpret)
+    return _kernel_block_jit(Xr, Xc, edges, spec, use_pallas, interpret)
 
 
 @partial(jax.jit, static_argnames=("spec", "use_pallas", "interpret"))
 def _kernel_matmat_multi_rows_jit(Xr: jnp.ndarray, Xc: jnp.ndarray, Vs,
-                                  spec: KernelSpec, use_pallas: bool,
+                                  edges, spec: KernelSpec, use_pallas: bool,
                                   interpret: bool):
     Vs = tuple(Vs)
     if not use_pallas:
-        K = _specs.apply(spec, Xr, Xc)
-        return tuple(K @ V.astype(jnp.float32) for V in Vs)
+        K = _specs.apply(spec, Xr, Xc, edges)
+        dt = spec.tile_dtype()
+        return tuple(
+            jax.lax.dot_general(K.astype(dt), V.astype(dt),
+                                dimension_numbers=(((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+            for V in Vs)
     nr = Xr.shape[0]
     ms = [V.shape[1] for V in Vs]
     Xrp = _pad_rows(Xr, _k.BLOCK_R)
     Xcp = _pad_rows(Xc, _k.BLOCK_C)
     Vps = tuple(_pad_cols(_pad_rows(V, _k.BLOCK_C), 128) for V in Vs)
     outs = _k.pairwise_matmat_multi_padded(spec, Xrp, Xcp, Vps,
-                                           interpret=interpret)
+                                           interpret=interpret, edges=edges)
     return tuple(out[:nr, :m] for out, m in zip(outs, ms))
 
 
 def kernel_matmat_multi_rows(spec: KernelSpec, Xr: jnp.ndarray,
                              Xc: jnp.ndarray, Vs, use_pallas: bool = True,
-                             interpret: bool | None = None):
+                             interpret: bool | None = None,
+                             edges: jnp.ndarray | None = None):
     """[K(Xr, Xc) @ V for V in Vs] — the rectangular row-slab fusion.
 
-    The shard_map fast path of the sweep engine: each device gathers its
-    contiguous local row slab ``Xr = X[r0:r1]`` and passes the full column
-    points ``Xc``, so only that slab's (128 × 128) kernel tiles are ever
-    computed — once, in VMEM — and contracted against every right-hand side.
+    The gather-based fast path of the sweep engine: the caller materializes
+    its row slab ``Xr = X[r0:r1]`` and passes the full column points ``Xc``,
+    so only that slab's (128 × 128) kernel tiles are ever computed — once,
+    in VMEM — and contracted against every right-hand side.  Prefer
+    ``kernel_matmat_multi_slab`` when the slab is a contiguous range of
+    ``Xc`` — it addresses the slab in-launch instead of copying it.
     """
     if interpret is None:
         interpret = _interpret_mode()
-    return _kernel_matmat_multi_rows_jit(Xr, Xc, tuple(Vs), spec, use_pallas,
+    return _kernel_matmat_multi_rows_jit(Xr, Xc, tuple(Vs), edges, spec,
+                                         use_pallas, interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("spec", "slab_len", "use_pallas", "interpret"))
+def _kernel_matmat_multi_slab_jit(X: jnp.ndarray, start_row, Vs, edges,
+                                  spec: KernelSpec, slab_len: int,
+                                  use_pallas: bool, interpret: bool):
+    Vs = tuple(Vs)
+    n = X.shape[0]
+    start = jnp.asarray(start_row, jnp.int32)
+    if not use_pallas:
+        # dense fallback mirrors the clip-gather semantics: rows past n read
+        # the last row and are discarded by the caller's validity mask
+        row_idx = jnp.clip(start + jnp.arange(slab_len), 0, n - 1)
+        Xr = jnp.take(X, row_idx, axis=0)
+        K = _specs.apply(spec, Xr, X, edges)
+        dt = spec.tile_dtype()
+        return tuple(
+            jax.lax.dot_general(K.astype(dt), V.astype(dt),
+                                dimension_numbers=(((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+            for V in Vs)
+    ms = [V.shape[1] for V in Vs]
+    Xp = _pad_rows(X, _k.BLOCK_R)
+    Vps = tuple(_pad_cols(_pad_rows(V, _k.BLOCK_C), 128) for V in Vs)
+    # align the dynamic start down to a 128-row block boundary; the launch
+    # covers [off·128, off·128 + nblocks·128) and the requested slab is cut
+    # out afterwards (within ∈ [0, 128), so one extra block always suffices)
+    off = start // _k.BLOCK_R
+    within = start - off * _k.BLOCK_R
+    nblocks = (slab_len + 2 * _k.BLOCK_R - 1) // _k.BLOCK_R
+    outs = _k.pairwise_matmat_multi_slab(spec, Xp, off, nblocks, Vps,
+                                         interpret=interpret, edges=edges)
+    return tuple(
+        jax.lax.dynamic_slice_in_dim(out, within, slab_len, axis=0)[:, :m]
+        for out, m in zip(outs, ms))
+
+
+def kernel_matmat_multi_slab(spec: KernelSpec, X: jnp.ndarray, start_row,
+                             slab_len: int, Vs, use_pallas: bool = True,
+                             interpret: bool | None = None,
+                             edges: jnp.ndarray | None = None):
+    """[K(X[start:start+slab_len], X) @ V for V in Vs] without gathering.
+
+    The scalar-prefetch slab launch: ``start_row`` may be a TRACED scalar —
+    it rides a ``PrefetchScalarGridSpec`` into the row-tile index map, so
+    one compiled launch serves every slab position of a shard_map sweep and
+    no device ever materializes a row-slice copy of ``X``.  Rows at indices
+    ≥ n (a tail slab) are duplicates of the last row/block; callers mask
+    them (the sweep engine's validity mask already does).
+    """
+    if interpret is None:
+        interpret = _interpret_mode()
+    return _kernel_matmat_multi_slab_jit(X, start_row, tuple(Vs), edges,
+                                         spec, int(slab_len), use_pallas,
                                          interpret)
 
 
 def kernel_matmat_multi(spec: KernelSpec, X: jnp.ndarray, Vs,
                         use_pallas: bool = True,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None,
+                        edges: jnp.ndarray | None = None):
     """[K(X, X) @ V for V in Vs] with each kernel tile computed ONCE.
 
     The sweep-engine fast path: all right-hand sides (projection sketches,
@@ -117,23 +191,25 @@ def kernel_matmat_multi(spec: KernelSpec, X: jnp.ndarray, Vs,
     The square special case of ``kernel_matmat_multi_rows``.
     """
     return kernel_matmat_multi_rows(spec, X, X, Vs, use_pallas=use_pallas,
-                                    interpret=interpret)
+                                    interpret=interpret, edges=edges)
 
 
 def kernel_matmat(spec: KernelSpec, X: jnp.ndarray, V: jnp.ndarray,
                   use_pallas: bool = True,
-                  interpret: bool | None = None) -> jnp.ndarray:
+                  interpret: bool | None = None,
+                  edges: jnp.ndarray | None = None) -> jnp.ndarray:
     """K(X, X) @ V fused: kernel tiles never leave VMEM (streaming matmat)."""
     squeeze = V.ndim == 1
     V2 = V[:, None] if squeeze else V
     (out,) = kernel_matmat_multi(spec, X, (V2,), use_pallas=use_pallas,
-                                 interpret=interpret)
+                                 interpret=interpret, edges=edges)
     return out[:, 0] if squeeze else out
 
 
 @partial(jax.jit, static_argnames=("spec", "interpret"))
-def _sketched_gram_jit(Xs: jnp.ndarray, spec: KernelSpec, scales, interpret):
-    blk = _kernel_block_jit(Xs, Xs, spec, True, interpret)
+def _sketched_gram_jit(Xs: jnp.ndarray, scales, edges, spec: KernelSpec,
+                       interpret):
+    blk = _kernel_block_jit(Xs, Xs, edges, spec, True, interpret)
     if scales is not None:
         blk = blk * (scales[:, None] * scales[None, :])
     return blk
@@ -141,8 +217,13 @@ def _sketched_gram_jit(Xs: jnp.ndarray, spec: KernelSpec, scales, interpret):
 
 def sketched_gram(spec: KernelSpec, Xs: jnp.ndarray,
                   scales: jnp.ndarray | None = None,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """S^T K S for a column sketch S given the selected points Xs = X[idx]."""
+                  interpret: bool | None = None,
+                  edges: jnp.ndarray | None = None) -> jnp.ndarray:
+    """S^T K S for a column sketch S given the selected points Xs = X[idx].
+
+    ``edges`` (optional): a sign-split segment table covering ``Xs`` routes
+    an l1dist statistic through the MXU form (selected points are a subset
+    of the operator's data, so the operator's own table stays exact)."""
     if interpret is None:
         interpret = _interpret_mode()
-    return _sketched_gram_jit(Xs, spec, scales, interpret)
+    return _sketched_gram_jit(Xs, scales, edges, spec, interpret)

@@ -7,10 +7,18 @@ Pallas sweep template (``repro.kernels.pairwise.kernel``) serves all of them:
 
 - ``stat``: which pairwise statistic a (BLOCK_R, BLOCK_C) tile computes from
   the point tiles — ``'sqdist'`` (‖x−y‖₂², MXU cross product + VPU combine),
-  ``'dot'`` (xᵀy, pure MXU), or ``'l1dist'`` (‖x−y‖₁, a VPU accumulation over
-  the feature axis; no MXU form exists).
+  ``'dot'`` (xᵀy, pure MXU), or ``'l1dist'`` (‖x−y‖₁: the MXU sign-split
+  route of ``repro.kernels.pairwise.signsplit`` when the operator has a
+  segment plan for its data, else a VPU accumulation over the feature axis —
+  the retained reference route).
 - ``entry_fn``: a *pure elementwise* statistic → kernel-entry function (runs
   on the VPU inside the kernel, and verbatim in the dense fallback).
+- ``precision``: the mixed-precision tile policy — ``'f32'`` (default) or
+  ``'bf16_f32acc'`` (operand tiles quantized to bf16, every contraction and
+  elementwise combine accumulated in f32 via ``preferred_element_type``).
+  The policy is a spec FIELD so it rides the existing static-argument
+  plumbing (jit keys, serve artifacts, registry factories) for free; derive
+  variants with ``spec.with_precision("bf16_f32acc")``.
 
 Everything else — tiling, padding, the multi-right-hand-side fusion, the
 shard_map row-slab claim, diag shortcuts — is shared machinery.
@@ -52,8 +60,22 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.pairwise import signsplit
+
 #: statistics the sweep template knows how to compute from point tiles
 STAT_KINDS = ("sqdist", "dot", "l1dist")
+
+#: tile-evaluation precision policies (operand dtype × accumulator dtype)
+PRECISIONS = ("f32", "bf16_f32acc")
+
+
+def tile_dtype(precision: str):
+    """Operand dtype of a precision policy (accumulators are always f32)."""
+    if precision == "bf16_f32acc":
+        return jnp.bfloat16
+    if precision == "f32":
+        return jnp.float32
+    raise ValueError(f"unknown precision {precision!r}; one of {PRECISIONS}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,40 +94,100 @@ class KernelSpec:
     stat: str
     entry_fn: Callable[[jnp.ndarray], jnp.ndarray]
     params: Tuple[Tuple[str, float], ...] = ()
+    precision: str = "f32"
 
     def __post_init__(self):
         if self.stat not in STAT_KINDS:
             raise ValueError(
                 f"KernelSpec {self.name!r}: unknown stat {self.stat!r}; "
                 f"one of {STAT_KINDS}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"KernelSpec {self.name!r}: unknown precision "
+                f"{self.precision!r}; one of {PRECISIONS}")
 
     def param(self, name: str):
         return dict(self.params)[name]
 
+    def with_precision(self, precision: str) -> "KernelSpec":
+        """This spec under another tile-precision policy (cached — one
+        object per (spec, precision), preserving the one-jit-entry-per-
+        parameter-set invariant the factories establish)."""
+        return _with_precision(self, precision)
+
+    def tile_dtype(self):
+        """Operand dtype the tile/dense paths quantize point blocks to."""
+        return tile_dtype(self.precision)
+
     def __repr__(self):  # stable, param-revealing (lambdas repr poorly)
         ps = ", ".join(f"{k}={v}" for k, v in self.params)
-        return f"KernelSpec({self.name}({ps}), stat={self.stat})"
+        prec = "" if self.precision == "f32" else f", {self.precision}"
+        return f"KernelSpec({self.name}({ps}), stat={self.stat}{prec})"
+
+
+#: (spec, precision) -> variant.  A manual cache (not lru_cache) so the
+#: round-trip can be seeded: X.with_precision(p).with_precision(q) must land
+#: on the SAME object as X.with_precision(q) — including q == X.precision,
+#: where it must be X itself — or the jit caches fork per route.
+_PRECISION_VARIANTS: dict = {}
+
+
+def _with_precision(spec: KernelSpec, precision: str) -> KernelSpec:
+    if precision == spec.precision:
+        return spec
+    key = (spec, precision)
+    hit = _PRECISION_VARIANTS.get(key)
+    if hit is None:
+        hit = dataclasses.replace(spec, precision=precision)
+        _PRECISION_VARIANTS[key] = hit
+        _PRECISION_VARIANTS[(hit, spec.precision)] = spec
+    return hit
 
 
 # ---------------------------------------------------------------------------
 # dense statistic + entry evaluation (the non-Pallas route / diag shortcut)
 # ---------------------------------------------------------------------------
 
+_DOT_DN = (((1,), (1,)), ((), ()))
+
+
+def dot_f32acc(Xr: jnp.ndarray, Xc: jnp.ndarray) -> jnp.ndarray:
+    """Xr @ Xc.T with an f32 accumulator regardless of operand dtype — the
+    one contraction primitive every tile/dense statistic routes through, so
+    the bf16_f32acc policy means the same thing everywhere (bf16 operands on
+    the MXU, ``preferred_element_type=f32`` partial sums)."""
+    return jax.lax.dot_general(Xr, Xc, dimension_numbers=_DOT_DN,
+                               preferred_element_type=jnp.float32)
+
+
 def _sqdist(Xr: jnp.ndarray, Xc: jnp.ndarray) -> jnp.ndarray:
-    """Pairwise squared distances, MXU-friendly: |x|² + |y|² − 2 x·y."""
-    xx = jnp.sum(Xr * Xr, axis=1)
-    yy = jnp.sum(Xc * Xc, axis=1)
-    cross = Xr @ Xc.T
+    """Pairwise squared distances, MXU-friendly: |x|² + |y|² − 2 x·y.
+
+    Operands may be bf16 (the precision policy's quantization); the norms
+    and the combine run in f32 on the quantized values so dense and tile
+    routes stay bit-comparable per policy.
+    """
+    Xr32 = Xr.astype(jnp.float32)
+    Xc32 = Xc.astype(jnp.float32)
+    xx = jnp.sum(Xr32 * Xr32, axis=1)
+    yy = jnp.sum(Xc32 * Xc32, axis=1)
+    cross = dot_f32acc(Xr, Xc)
     return jnp.maximum(xx[:, None] + yy[None, :] - 2.0 * cross, 0.0)
 
 
 def _l1dist(Xr: jnp.ndarray, Xc: jnp.ndarray) -> jnp.ndarray:
-    """Pairwise L1 distances accumulated one feature at a time.
+    """Pairwise L1 distances accumulated one feature at a time — the VPU
+    reference route.
 
-    ‖x−y‖₁ has no inner-product form, so the obvious broadcast builds an
-    (nr, nc, d) temporary — d× the panel budget.  Looping the feature axis
-    keeps the live set at one (nr, nc) accumulator regardless of d.
+    The MXU default for fused launches is the sign-split decomposition
+    (``signsplit.l1dist``), which needs a data-derived segment plan; this
+    loop is the plan-free fallback (continuous/high-cardinality features,
+    traced inputs) and the parity oracle the MXU route is asserted against.
+    Looping the feature axis keeps the live set at one (nr, nc) f32
+    accumulator regardless of d (the broadcast form is d× that).
     """
+    Xr = Xr.astype(jnp.float32)
+    Xc = Xc.astype(jnp.float32)
     nr, nc = Xr.shape[0], Xc.shape[0]
 
     def body(k, acc):
@@ -117,23 +199,37 @@ def _l1dist(Xr: jnp.ndarray, Xc: jnp.ndarray) -> jnp.ndarray:
                              jnp.zeros((nr, nc), jnp.float32))
 
 
-def stat_block(stat: str, Xr: jnp.ndarray, Xc: jnp.ndarray) -> jnp.ndarray:
-    """The (|Xr| × |Xc|) pairwise statistic, dense jnp (f32)."""
-    Xr = Xr.astype(jnp.float32)
-    Xc = Xc.astype(jnp.float32)
+def stat_block(stat: str, Xr: jnp.ndarray, Xc: jnp.ndarray,
+               precision: str = "f32",
+               edges: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """The (|Xr| × |Xc|) pairwise statistic (f32 out).
+
+    ``precision`` quantizes the point operands (``tile_dtype``) while every
+    accumulator stays f32.  ``edges`` — a sign-split segment table — selects
+    the MXU route for ``l1dist``; without it the VPU reference loop runs.
+    Other statistics ignore ``edges``.
+    """
+    dt = tile_dtype(precision)
+    Xr = Xr.astype(dt)
+    Xc = Xc.astype(dt)
     if stat == "dot":
-        return Xr @ Xc.T
+        return dot_f32acc(Xr, Xc)
     if stat == "sqdist":
         return _sqdist(Xr, Xc)
     if stat == "l1dist":
+        if edges is not None:
+            return signsplit.l1dist(Xr, Xc, edges, dt)
         return _l1dist(Xr, Xc)
     raise ValueError(f"unknown stat {stat!r}")
 
 
-def apply(spec: KernelSpec, Xr: jnp.ndarray, Xc: jnp.ndarray) -> jnp.ndarray:
+def apply(spec: KernelSpec, Xr: jnp.ndarray, Xc: jnp.ndarray,
+          edges: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """K[ri, cj] = entry_fn(stat(x_ri, x_cj)) — the dense evaluation every
-    non-Pallas route (panel scans, ``full()``) runs."""
-    return spec.entry_fn(stat_block(spec.stat, Xr, Xc))
+    non-Pallas route (panel scans, ``full()``) runs.  Precision follows the
+    spec; ``edges`` opts l1dist statistics into the MXU sign-split form."""
+    return spec.entry_fn(
+        stat_block(spec.stat, Xr, Xc, spec.precision, edges))
 
 
 def diag(spec: KernelSpec, X: jnp.ndarray) -> jnp.ndarray:
@@ -141,9 +237,10 @@ def diag(spec: KernelSpec, X: jnp.ndarray) -> jnp.ndarray:
 
     Distance statistics vanish on the diagonal (stat ≡ 0 → a constant
     entry, e.g. 1.0 for rbf/laplacian/matern); the dot statistic reduces to
-    the row norms ‖x_i‖².
+    the row norms ‖x_i‖² (computed on precision-quantized values so the
+    diagonal matches what a fused sweep would produce under the policy).
     """
-    X32 = X.astype(jnp.float32)
+    X32 = X.astype(spec.tile_dtype()).astype(jnp.float32)
     if spec.stat == "dot":
         t = jnp.sum(X32 * X32, axis=1)
     else:

@@ -69,14 +69,19 @@ class KernelModelArtifact:
     def c(self) -> int:
         return int(self.X_landmarks.shape[0])
 
-    def landmark_operator(self, use_pallas: Optional[bool] = None
-                          ) -> PairwiseKernel:
+    def landmark_operator(self, use_pallas: Optional[bool] = None,
+                          precision: Optional[str] = None) -> PairwiseKernel:
         """The data-backed operator query launches run through: a
         ``PairwiseKernel`` over the landmark points, so
         ``op.cross(X_query, heads)`` is K(X_query, X_S) @ head per head in
-        one fused rectangular launch."""
+        one fused rectangular launch.  ``precision`` overrides the spec's
+        tile policy for query-time launches (e.g. ``'bf16_f32acc'`` to serve
+        an f32-built artifact with bf16 cross tiles)."""
         up = self.use_pallas if use_pallas is None else use_pallas
-        return PairwiseKernel(self.X_landmarks, self.spec, up)
+        spec = self.spec
+        if precision is not None:
+            spec = spec.with_precision(precision)
+        return PairwiseKernel(self.X_landmarks, spec, up)
 
     def refit(self, y: jnp.ndarray) -> "KernelModelArtifact":
         """New KRR targets on the SAME kernel via the cached Woodbury
@@ -94,6 +99,7 @@ def _meta(artifact: KernelModelArtifact) -> str:
     return json.dumps({
         "spec_name": artifact.spec.name,
         "spec_params": list(artifact.spec.params),
+        "spec_precision": artifact.spec.precision,
         "alpha": float(artifact.alpha),
         "selection": artifact.selection,
         "use_pallas": bool(artifact.use_pallas),
@@ -122,6 +128,9 @@ def artifact_from_tree(tree: dict) -> KernelModelArtifact:
     meta = json.loads(str(np.asarray(tree["meta_json"]).item()))
     spec = pw_specs.get_spec(meta["spec_name"],
                              **{k: v for k, v in meta["spec_params"]})
+    # precision is a spec field, not a factory param, so artifacts written
+    # before the field existed restore as f32 (the old behavior)
+    spec = spec.with_precision(meta.get("spec_precision", "f32"))
     idx = tree.get("landmark_indices")
     return KernelModelArtifact(
         X_landmarks=jnp.asarray(tree["X_landmarks"]),

@@ -63,18 +63,21 @@ def _as_request(q) -> QueryRequest:
 
 def answer_batch(artifact: KernelModelArtifact,
                  requests: Sequence[QueryRequest],
-                 op=None, bucket: int = 0) -> List[QueryResult]:
+                 op=None, bucket: int = 0,
+                 precision: Optional[str] = None) -> List[QueryResult]:
     """Answer one (already-bucketed) batch with ONE cross-kernel launch.
 
     Requests are padded to the batch's max height with zero points (their
     kernel rows are computed and discarded — the ``bucket_by_size`` waste
     bound), stacked, and every head any request needs rides the same launch
-    as an extra right-hand side.
+    as an extra right-hand side.  ``precision`` (when ``op`` is not given)
+    overrides the artifact spec's tile policy for the cross launch.
     """
     requests = [_as_request(q) for q in requests]
     if not requests:
         return []
-    op = artifact.landmark_operator() if op is None else op
+    if op is None:
+        op = artifact.landmark_operator(precision=precision)
     tasks = tuple(t for t in TASKS
                   if any(r.task == t for r in requests))
     heads = tuple(artifact.heads[t].astype(jnp.float32) for t in tasks)
@@ -104,19 +107,23 @@ def serve_kernel_model(
     queries,
     waste: float = 0.25,
     op=None,
+    precision: Optional[str] = None,
 ) -> List[QueryResult]:
     """Answer a heterogeneous batch of queries: one rectangular fused launch
     per size bucket, results in input order.
 
     ``queries`` is a list of ``QueryRequest`` (or raw (n_q × d) arrays,
-    treated as KRR requests).  This is the one-shot entry point; the
+    treated as KRR requests).  ``precision`` (when ``op`` is not given)
+    overrides the artifact spec's tile policy for every cross launch — the
+    bf16_f32acc serving mode.  This is the one-shot entry point; the
     continuous-batching server (``repro.launch.serve_kernel``) calls
     ``plan_buckets`` + ``answer_batch`` itself so it can meter per-request
     latency.
     """
     requests = [_as_request(q) for q in queries]
     results: List[Optional[QueryResult]] = [None] * len(requests)
-    op = artifact.landmark_operator() if op is None else op
+    if op is None:
+        op = artifact.landmark_operator(precision=precision)
     for b, bucket in enumerate(plan_buckets(requests, waste)):
         answers = answer_batch(artifact, [requests[i] for i in bucket],
                                op=op, bucket=b)

@@ -161,6 +161,57 @@ def test_conformance_shapes_hypothesis(n, d, seed):
 
 
 # ---------------------------------------------------------------------------
+# the precision axis: both tile policies, both routes, every registered spec
+# ---------------------------------------------------------------------------
+
+#: f32 at parity tol; bf16_f32acc within the quantization budget
+PREC_TOL = {"f32": 1e-5, "bf16_f32acc": 5e-2}
+
+
+@pytest.mark.parametrize("precision", pw_specs.PRECISIONS)
+@pytest.mark.parametrize("name", pw_specs.registered_kernels())
+def test_conformance_precision_policy(name, precision):
+    """matmat / block / sweep under each tile policy vs the f32 oracle,
+    plus the recorded route suffix and CountingOperator attribution."""
+    X = _data(8)
+    spec = pw_specs.suggested_spec(name, D).with_precision(precision)
+    tol = PREC_TOL[precision]
+    Kd = np.asarray(pw_ref.kernel_block(spec.with_precision("f32"), X, X),
+                    np.float64)
+    rng = np.random.default_rng(9)
+    V = jnp.asarray(rng.normal(size=(N, 4)), jnp.float32)
+    ridx = jnp.asarray([0, 17, N - 1])
+    cidx = jnp.asarray([3, N // 2, N - 2])
+    for use_pallas in (True, False):
+        op = PairwiseKernel(X, spec, use_pallas=use_pallas)
+        assert op.precision == precision
+        _parity(op.matmat(V), Kd @ np.asarray(V, np.float64), tol=tol)
+        _parity(op.block(ridx, cidx),
+                Kd[np.asarray(ridx)][:, np.asarray(cidx)], tol=tol)
+    Kc = CountingOperator(PairwiseKernel(X, spec, use_pallas=True))
+    (got,) = Kc.sweep([sw.MatmulPlan(V)])
+    _parity(got, Kd @ np.asarray(V, np.float64), tol=tol)
+    suffix = "" if precision == "f32" else "+" + precision
+    assert Kc.last_route == "pallas_fused" + suffix
+    assert Kc.last_precision == precision
+    assert Kc.counts["bf16_sweeps"] == (0 if precision == "f32" else 1)
+    assert Kc.counts["fused_sweeps"] == 1     # suffix must not break metering
+
+
+def test_with_precision_preserves_spec_identity_invariants():
+    """One object per (spec, precision) — the jit-cache invariant — and the
+    f32 round-trip is the original factory object."""
+    spec = pw_specs.suggested_spec("rbf", D)
+    bf = spec.with_precision("bf16_f32acc")
+    assert bf is spec.with_precision("bf16_f32acc")
+    assert spec.with_precision("f32") is spec
+    assert bf.with_precision("f32") is spec
+    assert bf.name == spec.name and bf.params == spec.params
+    with pytest.raises(ValueError, match="precision"):
+        spec.with_precision("f16")
+
+
+# ---------------------------------------------------------------------------
 # forced-8-device path (the CI multidevice job re-runs this file)
 # ---------------------------------------------------------------------------
 

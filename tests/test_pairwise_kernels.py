@@ -165,6 +165,60 @@ def test_custom_registered_kernel_end_to_end():
 
 
 # ---------------------------------------------------------------------------
+# mixed-precision policy through the shared template
+# ---------------------------------------------------------------------------
+
+#: f32 at template parity; bf16 tiles within the quantization budget
+PREC_TOL = {"f32": 1e-5, "bf16_f32acc": 5e-2}
+
+
+@pytest.mark.parametrize("name", ALL_KERNELS)
+@pytest.mark.parametrize("precision", specs.PRECISIONS)
+def test_pairwise_block_precision_vs_oracle(name, precision):
+    """Both tile policies against the f32 oracle, Pallas and dense routes —
+    and the two routes agree with each other bit-for-policy (both quantize
+    identically, so their mutual gap stays at f32 parity)."""
+    spec = _spec(name).with_precision(precision)
+    X = _points(12, 100)
+    Y = _points(13, 90)
+    out = pw_ops.kernel_block(spec, X, Y)
+    dense = pw_ops.kernel_block(spec, X, Y, use_pallas=False)
+    ref = pw_ref.kernel_block(_spec(name), X, Y)
+    assert_parity(out, ref, tol=PREC_TOL[precision])
+    assert_parity(out, dense)
+
+
+@pytest.mark.parametrize("precision", specs.PRECISIONS)
+def test_fast_model_end_to_end_precision(precision):
+    """fast_model_with_error runs the whole fused pipeline under each policy;
+    bf16_f32acc may degrade the approximation by at most 5e-2."""
+    spec = _spec("rbf").with_precision(precision)
+    rng = np.random.default_rng(14)
+    centers = rng.normal(size=(4, 8)) * 1.5
+    X = jnp.asarray(centers[rng.integers(0, 4, size=150)]
+                    + rng.normal(size=(150, 8)) * 0.2, jnp.float32)
+    Kc = CountingOperator(PairwiseKernel(X, spec, use_pallas=True))
+    ap, err = spsd.fast_model_with_error(Kc, jax.random.PRNGKey(1), c=10,
+                                         s=40, s_sketch="gaussian", probes=16)
+    suffix = "" if precision == "f32" else "+" + precision
+    assert Kc.last_route == "pallas_fused" + suffix
+    assert np.isfinite(float(err))
+    ref_err = float(spsd.relative_error(
+        PairwiseKernel(X, _spec("rbf"), use_pallas=False), ap,
+        method="dense"))
+    assert ref_err < 1.0
+    # the bf16 model's true error may exceed the f32 pipeline's by at most
+    # the quantization budget (both are ~0.2 at these shapes)
+    f32_ap = spsd.fast_model(
+        PairwiseKernel(X, _spec("rbf"), use_pallas=True),
+        jax.random.PRNGKey(1), c=10, s=40, s_sketch="gaussian")
+    f32_err = float(spsd.relative_error(
+        PairwiseKernel(X, _spec("rbf"), use_pallas=False), f32_ap,
+        method="dense"))
+    assert ref_err <= f32_err + 5e-2
+
+
+# ---------------------------------------------------------------------------
 # back-compat constructors
 # ---------------------------------------------------------------------------
 

@@ -85,3 +85,82 @@ def test_roofline_finalize_bottleneck():
     assert r.compute_s == pytest.approx(1.0)
     assert r.bottleneck == "collective"
     assert r.useful_flops_frac == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# hardware profiles + the pairwise-launch scoring model
+# ---------------------------------------------------------------------------
+
+def test_finalize_accepts_a_hardware_profile():
+    """The peak rates are a parameter: the same counted terms score
+    differently (and are labeled differently) under another profile."""
+    toy = rl.HardwareProfile("toy", peak_flops=1e12, hbm_bw=1e11,
+                             link_bw=1e10)
+    kw = dict(arch="a", shape="s", mesh="m", chips=1,
+              hlo_gflops=1000.0, hlo_gbytes=50.0, coll_gbytes=0.0,
+              coll_by_kind={}, model_gflops=1000.0, bytes_per_chip=0.0)
+    r = rl.Roofline(**kw).finalize(toy)
+    assert r.profile_name == "toy"
+    assert r.compute_s == pytest.approx(1.0)       # 1000 GFLOP / 1 TFLOP/s
+    assert r.memory_s == pytest.approx(0.5)        # 50 GB / 100 GB/s
+    # default stays v5e (the pre-profile behavior, relied on above)
+    assert rl.Roofline(**kw).finalize().profile_name == "v5e"
+
+
+def test_default_profile_is_honest_about_cpu():
+    prof = rl.default_profile()
+    import jax
+    expected = rl.V5E if jax.default_backend() == "tpu" else rl.CPU_INTERPRET
+    assert prof is expected
+    # module aliases stay pinned to v5e for back-compat
+    assert rl.PEAK_FLOPS == rl.V5E.peak_flops
+
+
+def test_pairwise_launch_model_flop_split():
+    """The unit split is the point: sign-split moves l1dist work from the
+    VPU bucket to the MXU bucket; the VPU loop has zero MXU stat FLOPs."""
+    from repro.kernels.pairwise import specs as pw_specs
+    nr = nc = 256
+    d, m, B = 8, 16, 7
+    lap = pw_specs.suggested_spec("laplacian", d)
+    mxu_form = rl.pairwise_launch_model(lap, nr, nc, d, m,
+                                        l1_route="mxu_signsplit", segments=B)
+    vpu_form = rl.pairwise_launch_model(lap, nr, nc, d, m,
+                                        l1_route="vpu_loop")
+    entries = nr * nc
+    inner = 2 * d * B
+    assert mxu_form["mxu_gflops"] * 1e9 == pytest.approx(
+        (4 * inner + 2 * m) * entries)
+    assert vpu_form["vpu_gflops"] * 1e9 == pytest.approx(
+        (4 * d + 8) * entries)
+    assert vpu_form["mxu_gflops"] * 1e9 == pytest.approx(2 * m * entries)
+    # dot: pure MXU statistic
+    lin = pw_specs.suggested_spec("linear", d)
+    lin_model = rl.pairwise_launch_model(lin, nr, nc, d, m)
+    assert lin_model["mxu_gflops"] * 1e9 == pytest.approx(
+        (2 * d + 2 * m) * entries)
+    # bf16 tiles halve the point bytes on the HBM floor
+    rbf = pw_specs.suggested_spec("rbf", d)
+    f32b = rl.pairwise_launch_model(rbf, nr, nc, d, m)["hbm_gbytes"]
+    bf16b = rl.pairwise_launch_model(
+        rbf.with_precision("bf16_f32acc"), nr, nc, d, m)["hbm_gbytes"]
+    assert bf16b < f32b
+
+
+def test_achieved_vs_roofline_report():
+    from repro.kernels.pairwise import specs as pw_specs
+    toy = rl.HardwareProfile("toy", peak_flops=1e12, hbm_bw=1e11,
+                             link_bw=1e10)
+    spec = pw_specs.suggested_spec("rbf", 8)
+    rep = rl.achieved_vs_roofline(spec, (256, 256, 8), None,
+                                  measured_s=1.0, m_total=16, profile=toy)
+    assert rep["kernel"] == "rbf" and rep["precision"] == "f32"
+    assert rep["profile"] == "toy" and rep["chips"] == 1
+    assert rep["bottleneck"] in ("compute", "memory")
+    assert rep["roofline_s"] == pytest.approx(
+        max(rep["compute_s"], rep["memory_s"]))
+    assert rep["achieved_frac"] == pytest.approx(rep["roofline_s"])
+    # a 4x faster launch achieves 4x the fraction
+    rep4 = rl.achieved_vs_roofline(spec, (256, 256, 8), None,
+                                   measured_s=0.25, m_total=16, profile=toy)
+    assert rep4["achieved_frac"] == pytest.approx(4 * rep["achieved_frac"])

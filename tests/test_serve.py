@@ -300,3 +300,42 @@ def test_build_from_params_deterministic():
     assert np.array_equal(
         np.asarray(a.X_landmarks),
         np.asarray(jnp.take(X, a.landmark_indices, axis=0)))
+
+
+# ---------------------------------------------------------------------------
+# mixed-precision serving
+# ---------------------------------------------------------------------------
+
+def test_serve_bf16_cross_launches_within_budget(artifact, queries):
+    """serve_kernel_model(precision='bf16_f32acc'): an f32-built artifact
+    served with bf16 cross tiles must stay within the quantization budget of
+    the f32 serving answers (scale-normalized), for every task head."""
+    reqs = [QueryRequest(queries, t) for t in ("krr", "kpca", "features")]
+    f32 = serve_kernel_model(artifact, reqs)
+    bf16 = serve_kernel_model(artifact, reqs, precision="bf16_f32acc")
+    for a, b in zip(bf16, f32):
+        assert parity_gap(a.out, b.out) <= 5e-2
+
+
+def test_serve_bf16_route_and_metering(artifact, queries):
+    """The bf16 cross launch is attributed: route suffix + last_precision on
+    the CountingOperator, one cross sweep per bucket as ever."""
+    op = CountingOperator(
+        artifact.landmark_operator(precision="bf16_f32acc"))
+    serve_kernel_model(artifact, [QueryRequest(queries, "krr")], op=op)
+    assert op.counts["cross_sweeps"] == 1
+    assert op.last_route == "pallas_fused_rows+bf16_f32acc"
+    assert op.last_precision == "bf16_f32acc"
+
+
+def test_artifact_spec_precision_round_trips_through_checkpoint(
+        artifact, tmp_path):
+    """A bf16-spec'd artifact persists its tile policy: load_artifact hands
+    back an operator that launches bf16 crosses without being asked."""
+    import dataclasses as dc
+    bf_art = dc.replace(
+        artifact, spec=artifact.spec.with_precision("bf16_f32acc"))
+    save_artifact(str(tmp_path / "ckpt"), bf_art)
+    loaded = load_artifact(str(tmp_path / "ckpt"))
+    assert loaded.spec is bf_art.spec          # registry-cached identity
+    assert loaded.landmark_operator().precision == "bf16_f32acc"
