@@ -1,0 +1,25 @@
+"""Static invariant checker: AST lint rules + jaxpr abstract interpretation.
+
+Two passes over the repo's load-bearing guarantees (run both with
+``python -m repro.analysis``):
+
+- :mod:`repro.analysis.lint` — AST rules RPR001–RPR005 (no-densify,
+  import-time backend capture, unaccumulated contractions, hard-coded
+  dtypes, module-state randomness) with in-source
+  ``# repro: allow-*(<reason>)`` waivers.
+- :mod:`repro.analysis.jaxpr_check` — abstract traces of every public
+  entry point: the Θ(n²) densify detector (RPRJ01), sweep-budget
+  verification against each registered ``SelectionPolicy`` (RPRJ02), and
+  the bf16_f32acc accumulation scan (RPRJ03).
+"""
+from repro.analysis.findings import Finding, compare_to_baseline, \
+    load_baseline, write_baseline
+from repro.analysis.lint import LintRule, get_rule, lint_file, lint_paths, \
+    lint_source, register_rule, registered_rules
+from repro.analysis.jaxpr_check import run_jaxpr_checks
+
+__all__ = [
+    "Finding", "compare_to_baseline", "load_baseline", "write_baseline",
+    "LintRule", "get_rule", "lint_file", "lint_paths", "lint_source",
+    "register_rule", "registered_rules", "run_jaxpr_checks",
+]

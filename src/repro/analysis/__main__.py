@@ -1,0 +1,89 @@
+"""CLI for the static analysis gate.
+
+    python -m repro.analysis                       # lint + jaxpr, exit 1 on findings
+    python -m repro.analysis --baseline analysis_baseline.json
+    python -m repro.analysis --json results/ANALYSIS_report.json
+    python -m repro.analysis --no-jaxpr            # AST pass only (fast)
+    python -m repro.analysis --write-baseline      # grandfather current findings
+
+Exit codes: 0 clean (or fully baselined), 1 new findings, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis import findings as findings_lib
+from repro.analysis import lint as lint_lib
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON of grandfathered findings")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the full findings report to this path")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the jaxpr abstract-interpretation pass")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline file from current findings")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    def note(msg):
+        if not args.quiet:
+            print(f"[analysis] {msg}", file=sys.stderr)
+
+    note(f"lint pass over {args.paths}")
+    all_findings = lint_lib.lint_paths(args.paths)
+
+    entry_reports = []
+    if not args.no_jaxpr:
+        # import deferred: the lint pass must work even where jax tracing
+        # is unavailable/slow
+        from repro.analysis.jaxpr_check import run_jaxpr_checks
+        jf, entry_reports = run_jaxpr_checks(log=note)
+        all_findings += jf
+
+    if args.write_baseline:
+        path = args.baseline or findings_lib.BASELINE_DEFAULT
+        findings_lib.write_baseline(path, all_findings)
+        note(f"wrote {len(all_findings)} finding(s) to {path}")
+        return 0
+
+    baseline = {}
+    if args.baseline:
+        try:
+            baseline = findings_lib.load_baseline(args.baseline)
+        except FileNotFoundError:
+            print(f"error: baseline {args.baseline!r} not found",
+                  file=sys.stderr)
+            return 2
+    new, stale = findings_lib.compare_to_baseline(all_findings, baseline)
+
+    if args.json_out:
+        report = findings_lib.report_dict(all_findings, new, stale,
+                                          entry_reports)
+        os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+        note(f"report written to {args.json_out}")
+
+    baselined = len(all_findings) - len(new)
+    for f in sorted(new):
+        print(f.format())
+    if stale:
+        note(f"{len(stale)} baseline entr(ies) no longer fire — shrink the "
+             "baseline with --write-baseline")
+    note(f"{len(all_findings)} finding(s): {len(new)} new, "
+         f"{baselined} baselined; {len(entry_reports)} entry traces")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,127 @@
+"""Finding records, baselines, and reports for the static analysis gate.
+
+A :class:`Finding` is one violation of a repo invariant, located at a
+``path:line`` (AST lint) or at a traced entry point (jaxpr checks, which have
+no single source line — they use a ``jaxpr:<entry>`` pseudo-path and line 0).
+
+Baselines grandfather known findings so the gate can land before the tree is
+perfectly clean: a baseline maps finding *fingerprints* to occurrence counts,
+and the gate fails only on findings beyond those counts.  Fingerprints hash
+the offending source text rather than the line number, so unrelated edits
+that shift lines don't churn the baseline — but the baselined debt can only
+shrink, never grow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+BASELINE_DEFAULT = "analysis_baseline.json"
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    path: str          # repo-relative posix path, or "jaxpr:<entry>" pseudo-path
+    line: int          # 1-based source line; 0 for jaxpr findings
+    rule: str          # "RPR001".."RPR005" (lint) / "RPRJ01".."RPRJ03" (jaxpr)
+    message: str
+    snippet: str = ""  # stripped offending source line (fingerprint component)
+
+    def fingerprint(self) -> str:
+        """Stable identity for baselining: rule + file + offending text.
+
+        The line number is deliberately excluded so edits elsewhere in the
+        file don't invalidate the baseline; the snippet hash keeps two
+        distinct violations in one file distinct.
+        """
+        text = self.snippet or self.message
+        digest = hashlib.sha256(text.encode("utf-8")).hexdigest()[:16]
+        return f"{self.rule}|{self.path}|{digest}"
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule} {self.message}"
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint()
+        return d
+
+
+def _count_fingerprints(findings: Iterable[Finding]) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for f in findings:
+        fp = f.fingerprint()
+        counts[fp] = counts.get(fp, 0) + 1
+    return counts
+
+
+def load_baseline(path: str) -> Dict[str, int]:
+    """Read a baseline file -> {fingerprint: allowed count}.
+
+    Accepts either the full report-style schema ({"findings": {...}}) or a
+    bare mapping; missing file is an error (pass no --baseline instead).
+    """
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    table = data.get("findings", data) if isinstance(data, dict) else {}
+    out: Dict[str, int] = {}
+    for key, val in table.items():
+        if isinstance(key, str) and key.startswith("_"):
+            continue  # "_comment" style keys
+        out[key] = int(val)
+    return out
+
+
+def write_baseline(path: str, findings: Sequence[Finding],
+                   comment: Optional[str] = None) -> None:
+    payload = {
+        "_comment": comment or (
+            "Grandfathered static-analysis findings; this debt may only "
+            "shrink. Regenerate with python -m repro.analysis "
+            "--write-baseline after fixing (never to admit new findings)."),
+        "findings": dict(sorted(_count_fingerprints(findings).items())),
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=False)
+        fh.write("\n")
+
+
+def compare_to_baseline(
+        findings: Sequence[Finding],
+        baseline: Dict[str, int]) -> Tuple[List[Finding], List[str]]:
+    """-> (new findings beyond the baselined counts, stale baseline entries).
+
+    New findings gate (exit 1); stale entries are advisory — the baseline
+    can be regenerated smaller.
+    """
+    remaining = dict(baseline)
+    new: List[Finding] = []
+    for f in sorted(findings):
+        fp = f.fingerprint()
+        if remaining.get(fp, 0) > 0:
+            remaining[fp] -= 1
+        else:
+            new.append(f)
+    stale = sorted(fp for fp, cnt in remaining.items() if cnt > 0)
+    return new, stale
+
+
+def report_dict(findings: Sequence[Finding], new: Sequence[Finding],
+                stale: Sequence[str], entry_reports: Sequence[dict] = (),
+                ) -> dict:
+    by_rule: Dict[str, int] = {}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    return {
+        "version": 1,
+        "total": len(findings),
+        "new": len(new),
+        "by_rule": dict(sorted(by_rule.items())),
+        "findings": [f.to_dict() for f in sorted(findings)],
+        "new_findings": [f.to_dict() for f in sorted(new)],
+        "stale_baseline": list(stale),
+        "jaxpr_entries": list(entry_reports),
+    }

@@ -1,0 +1,276 @@
+"""AST lint engine: pluggable rules + ``# repro: allow-*`` annotations.
+
+Rules register through :func:`register_rule`, the same decorator-registry
+shape as ``KernelSpec`` / ``SelectionPolicy`` — adding a rule module under
+``repro.analysis.rules`` and decorating a class is the whole integration.
+
+Intentional violations are waived in-source, never in config, so the reason
+lives next to the code it excuses:
+
+    StKS = S.sym(Kop.full())  # repro: allow-dense(dense oracle, small c)
+
+An annotation covers its own line, the line directly above the flagged
+statement, or any line the flagged expression spans.  File-level waivers —
+for modules whose whole point is a dense oracle — name the rule:
+
+    # repro: allow-file(RPR003: f64 reference oracles, MXU policy n/a)
+
+Empty reasons are themselves findings (RPR000): a waiver with no rationale
+is debt, not documentation.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+_ALLOW_RE = re.compile(r"#\s*repro:\s*allow-([a-z0-9-]+)\s*\((.*)\)\s*$")
+_FILE_ALLOW_RE = re.compile(r"^\s*(RPR[A-Z0-9]+)\s*:\s*(.*)$")
+
+
+class Annotations:
+    """Parsed ``# repro: allow-*`` waivers for one source file."""
+
+    def __init__(self, line_kinds: Dict[int, Set[str]],
+                 file_rules: Set[str], empty: List[int]):
+        self.line_kinds = line_kinds    # line -> {"dense", "dtype", ...}
+        self.file_rules = file_rules    # {"RPR003", ...}
+        self.empty_reason_lines = empty
+
+    def allows(self, kind: str, start: int, end: Optional[int]) -> bool:
+        lines = range(start - 1, (end or start) + 1)
+        return any(kind in self.line_kinds.get(ln, ()) for ln in lines)
+
+
+def parse_annotations(source: str) -> Annotations:
+    line_kinds: Dict[int, Set[str]] = {}
+    file_rules: Set[str] = set()
+    empty: List[int] = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        tokens = []
+    comments = [(t.start[0], t.string) for t in tokens
+                if t.type == tokenize.COMMENT]
+    if not tokens:  # fall back to a line scan if tokenization failed
+        comments = [(i + 1, line[line.index("#"):])
+                    for i, line in enumerate(source.splitlines())
+                    if "#" in line]
+    for lineno, text in comments:
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        kind, reason = m.group(1), m.group(2).strip()
+        if kind == "file":
+            fm = _FILE_ALLOW_RE.match(reason)
+            if fm and fm.group(2).strip():
+                file_rules.add(fm.group(1))
+            else:
+                empty.append(lineno)
+        elif not reason:
+            empty.append(lineno)
+        else:
+            line_kinds.setdefault(lineno, set()).add(kind)
+    return Annotations(line_kinds, file_rules, empty)
+
+
+class LintContext:
+    """Everything a rule needs to inspect one file."""
+
+    def __init__(self, path: str, source: str, tree: ast.AST,
+                 annotations: Annotations):
+        self.path = path  # repo-relative posix path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.annotations = annotations
+        # names bound by `import jax` / `from jax import devices` etc. —
+        # several rules resolve call targets through these
+        self.import_aliases = _collect_imports(tree)
+
+    def snippet(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: "LintRule", node: ast.AST, message: str,
+                ) -> Optional[Finding]:
+        """Build a Finding unless an allow-annotation waives it."""
+        if rule.rule_id in self.annotations.file_rules:
+            return None
+        lineno = getattr(node, "lineno", 0)
+        end = getattr(node, "end_lineno", None)
+        if rule.allow_kind and self.annotations.allows(
+                rule.allow_kind, lineno, end):
+            return None
+        return Finding(path=self.path, line=lineno, rule=rule.rule_id,
+                       message=message, snippet=self.snippet(lineno))
+
+
+def _collect_imports(tree: ast.AST) -> Dict[str, str]:
+    """Local name -> dotted origin ('jnp' -> 'jax.numpy', 'devices' ->
+    'jax.devices') for every import in the module."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.random.PRNGKey' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def resolved_name(ctx: LintContext, node: ast.AST) -> Optional[str]:
+    """Like :func:`dotted_name` but with the module's import aliases applied
+    to the root ('jr.PRNGKey' -> 'jax.random.PRNGKey')."""
+    name = dotted_name(node)
+    if name is None:
+        return None
+    root, _, rest = name.partition(".")
+    origin = ctx.import_aliases.get(root)
+    if origin is None:
+        return name
+    return f"{origin}.{rest}" if rest else origin
+
+
+def module_scope_nodes(tree: ast.AST) -> Iterable[ast.AST]:
+    """Yield nodes whose code runs at import time.
+
+    Descends through class bodies and conditionals but not into function /
+    lambda bodies — those are deferred.  Decorators and argument defaults DO
+    run at import, so they are yielded.
+    """
+    def walk(node: ast.AST):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for part in (child.decorator_list, child.args.defaults,
+                             child.args.kw_defaults):
+                    for sub in part:
+                        if sub is not None:
+                            yield sub
+                            yield from walk(sub)
+                continue
+            if isinstance(child, ast.Lambda):
+                continue
+            yield child
+            yield from walk(child)
+    yield from walk(tree)
+
+
+# ---------------------------------------------------------------------------
+# rule registry (register_rule decorator, mirroring register_kernel/policy)
+# ---------------------------------------------------------------------------
+
+class LintRule:
+    """Base class: subclass, set the class attrs, implement ``check``."""
+
+    rule_id: str = ""
+    title: str = ""
+    allow_kind: str = ""             # annotation kind that waives this rule
+    scope: Tuple[str, ...] = ("src/repro/",)  # path prefixes this rule scans
+
+    def applies_to(self, path: str) -> bool:
+        return any(path.startswith(prefix) for prefix in self.scope)
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+_RULES: Dict[str, LintRule] = {}
+
+
+def register_rule(cls):
+    """Class decorator: instantiate and register a LintRule by its id."""
+    inst = cls()
+    if not inst.rule_id:
+        raise ValueError(f"{cls.__name__} must set rule_id")
+    _RULES[inst.rule_id] = inst
+    return cls
+
+
+def registered_rules() -> List[LintRule]:
+    _ensure_builtin_rules()
+    return [_RULES[k] for k in sorted(_RULES)]
+
+
+def get_rule(rule_id: str) -> LintRule:
+    _ensure_builtin_rules()
+    return _RULES[rule_id]
+
+
+def _ensure_builtin_rules() -> None:
+    # import for the registration side effect; cheap and idempotent
+    from repro.analysis import rules  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, path: str,
+                rules: Optional[Sequence[LintRule]] = None,
+                ignore_scope: bool = False) -> List[Finding]:
+    """Lint one file's text under its repo-relative ``path``."""
+    active = list(rules) if rules is not None else registered_rules()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        return [Finding(path=path, line=exc.lineno or 0, rule="RPR000",
+                        message=f"syntax error: {exc.msg}")]
+    ann = parse_annotations(source)
+    ctx = LintContext(path, source, tree, ann)
+    findings: List[Finding] = [
+        Finding(path=path, line=ln, rule="RPR000",
+                message="allow-annotation without a reason — waivers must "
+                        "say why", snippet=ctx.snippet(ln))
+        for ln in ann.empty_reason_lines]
+    for rule in active:
+        if ignore_scope or rule.applies_to(path):
+            findings.extend(rule.check(ctx))
+    return findings
+
+
+def lint_file(file_path: str, repo_root: Optional[str] = None,
+              rules: Optional[Sequence[LintRule]] = None,
+              ignore_scope: bool = False) -> List[Finding]:
+    p = Path(file_path)
+    rel = p.resolve()
+    root = Path(repo_root).resolve() if repo_root else Path.cwd()
+    try:
+        rel_path = rel.relative_to(root).as_posix()
+    except ValueError:
+        rel_path = p.as_posix()
+    source = p.read_text(encoding="utf-8")
+    return lint_source(source, rel_path, rules=rules,
+                       ignore_scope=ignore_scope)
+
+
+def lint_paths(paths: Sequence[str], repo_root: Optional[str] = None,
+               rules: Optional[Sequence[LintRule]] = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories)."""
+    findings: List[Finding] = []
+    for entry in paths:
+        p = Path(entry)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(str(f), repo_root=repo_root,
+                                      rules=rules))
+    return findings

@@ -1,0 +1,2 @@
+"""Built-in lint rules. Importing this package registers every rule."""
+from repro.analysis.rules import backend, densify, precision, randomness  # noqa: F401

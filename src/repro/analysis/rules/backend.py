@@ -1,0 +1,56 @@
+"""RPR002 — import-time backend capture (the PR 3 bug class).
+
+``_INTERPRET = jax.default_backend() != "tpu"`` at module scope freezes the
+backend decision at import; flipping platforms afterwards (tests, multi-host
+launches, ``jax.config`` updates) silently runs the stale choice.  The fixed
+idiom resolves per call and threads the result as a static jit argument
+(see ``repro.kernels.pairwise.ops._interpret_mode``).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import (LintContext, LintRule, module_scope_nodes,
+                                 register_rule, resolved_name)
+
+# call targets (import-alias resolved) whose result depends on the active
+# backend / device topology
+_BACKEND_CALLS = (
+    "jax.devices",
+    "jax.local_devices",
+    "jax.device_count",
+    "jax.local_device_count",
+    "jax.process_count",
+    "jax.process_index",
+    "jax.default_backend",
+    "jax.lib.xla_bridge.get_backend",
+    "jax.extend.backend.get_backend",
+)
+
+
+@register_rule
+class ImportTimeBackendRule(LintRule):
+    rule_id = "RPR002"
+    title = "import-time backend capture"
+    allow_kind = "backend"
+    scope = ("src/repro/",)
+
+    def check(self, ctx: LintContext):
+        for node in module_scope_nodes(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = resolved_name(ctx, node.func)
+            if target is None:
+                continue
+            if target in _BACKEND_CALLS or (
+                    target.startswith("jax.") and
+                    target.endswith((".devices", ".device_count",
+                                     ".default_backend"))):
+                f = ctx.finding(
+                    self, node,
+                    f"'{target}()' at module scope captures the backend at "
+                    "import time — resolve per call (see "
+                    "pairwise.ops._interpret_mode) or annotate with "
+                    "'# repro: allow-backend(<reason>)'")
+                if f:
+                    yield f

@@ -1,0 +1,51 @@
+"""RPR001 — no-densify: ``.full()`` / ``.dense()`` materializations.
+
+The paper's entire claim (arXiv:1503.08395) is linear-time SPSD
+approximation; a single unguarded ``op.full()`` turns a streaming path into
+an Θ(n²) one.  The operators keep these methods as *oracles* — small-shape
+references and booby-trapped escapes — so each call site must say why it is
+allowed to densify:
+
+    Kd = Kop.full().astype(jnp.float32)  # repro: allow-dense(f64 oracle, n<=2k)
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import (LintContext, LintRule, register_rule,
+                                 resolved_name)
+
+# zero-arg attribute calls with these names densify an operator; jnp.full /
+# np.full take a shape argument and never match the zero-arg form
+_DENSIFY_METHODS = ("full", "dense")
+
+
+@register_rule
+class NoDensifyRule(LintRule):
+    rule_id = "RPR001"
+    title = "no-densify"
+    allow_kind = "dense"
+    scope = ("src/repro/",)
+
+    def check(self, ctx: LintContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if not isinstance(func, ast.Attribute):
+                continue
+            if func.attr not in _DENSIFY_METHODS:
+                continue
+            if node.args or node.keywords:
+                continue  # jnp.full(shape, v) etc. — not an operator oracle
+            target = resolved_name(ctx, func.value)
+            # numpy/jax namespaces never expose zero-arg full/dense
+            if target in ("numpy", "jax.numpy", "np", "jnp"):
+                continue
+            f = ctx.finding(
+                self, node,
+                f"'.{func.attr}()' materializes the full operator — "
+                "stream via sweep()/block(), or annotate the oracle with "
+                "'# repro: allow-dense(<reason>)'")
+            if f:
+                yield f

@@ -1,0 +1,103 @@
+"""RPR003 / RPR004 — precision-policy bypasses in the kernel layer.
+
+RPR003 *unaccumulated contraction*: a ``dot_general`` / ``einsum`` / ``@``
+under ``kernels/`` without ``preferred_element_type`` accumulates in the
+operand dtype — under the ``bf16_f32acc`` policy that silently becomes bf16
+accumulation, exactly the error the policy exists to forbid.  Use
+``preferred_element_type=jnp.float32`` (or ``specs.dot_f32acc``).
+
+RPR004 *hard-coded dtype literal*: kernel and serve modules must take tile
+dtypes from ``spec.precision`` / ``spec.tile_dtype()``; a literal
+``jnp.bfloat16`` forks the precision policy at one call site.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import (LintContext, LintRule, register_rule,
+                                 resolved_name)
+
+_CONTRACTION_TARGETS = (
+    "jax.lax.dot_general",
+    "jax.lax.dot",
+    "jax.numpy.einsum",
+    "jax.numpy.dot",
+    "jax.numpy.matmul",
+    "jax.numpy.tensordot",
+    "jax.numpy.vdot",
+    "jax.numpy.inner",
+)
+
+_LOW_PRECISION_DTYPES = ("bfloat16", "float16", "float8_e4m3fn",
+                         "float8_e5m2", "half")
+_DTYPE_NAMESPACES = ("jax.numpy", "numpy", "jax", "ml_dtypes")
+
+
+@register_rule
+class UnaccumulatedContractionRule(LintRule):
+    rule_id = "RPR003"
+    title = "unaccumulated contraction"
+    allow_kind = "contraction"
+    scope = ("src/repro/kernels/",)
+
+    def check(self, ctx: LintContext):
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.BinOp) and \
+                    isinstance(node.op, ast.MatMult):
+                f = ctx.finding(
+                    self, node,
+                    "'@' contraction accumulates in the operand dtype — use "
+                    "dot_general(..., preferred_element_type=jnp.float32) "
+                    "(specs.dot_f32acc) or annotate with "
+                    "'# repro: allow-contraction(<reason>)'")
+                if f:
+                    yield f
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            target = resolved_name(ctx, node.func)
+            if target not in _CONTRACTION_TARGETS:
+                continue
+            if any(kw.arg == "preferred_element_type"
+                   for kw in node.keywords):
+                continue
+            f = ctx.finding(
+                self, node,
+                f"'{target}' without preferred_element_type accumulates in "
+                "the operand dtype (bf16 under bf16_f32acc) — pass "
+                "preferred_element_type=jnp.float32 or annotate with "
+                "'# repro: allow-contraction(<reason>)'")
+            if f:
+                yield f
+
+
+@register_rule
+class HardCodedDtypeRule(LintRule):
+    rule_id = "RPR004"
+    title = "hard-coded low-precision dtype"
+    allow_kind = "dtype"
+    scope = ("src/repro/kernels/", "src/repro/serve/")
+
+    def check(self, ctx: LintContext):
+        for node in ast.walk(ctx.tree):
+            name = None
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.ctx, ast.Load) and \
+                    node.attr in _LOW_PRECISION_DTYPES:
+                base = resolved_name(ctx, node.value)
+                if base in _DTYPE_NAMESPACES:
+                    name = f"{base}.{node.attr}"
+            elif isinstance(node, ast.Constant) and \
+                    isinstance(node.value, str) and \
+                    node.value in _LOW_PRECISION_DTYPES:
+                name = f"'{node.value}'"
+            if name is None:
+                continue
+            f = ctx.finding(
+                self, node,
+                f"hard-coded {name} — tile dtypes must route through "
+                "spec.precision / spec.tile_dtype() so the precision "
+                "policy stays one switch; annotate the policy definition "
+                "site with '# repro: allow-dtype(<reason>)'")
+            if f:
+                yield f

@@ -1,0 +1,62 @@
+"""RPR005 — module-state randomness.
+
+Two shapes of hidden nondeterminism:
+
+* ``np.random.<fn>`` global-state draws (``rand``, ``normal``, ``seed``…) —
+  unreproducible across processes and import orders.  Seeded *generator
+  constructors* (``default_rng``, ``Generator``, ``SeedSequence``,
+  ``RandomState``) are the sanctioned replacement and are not flagged.
+* PRNG keys minted at module scope (``jax.random.PRNGKey(...)`` as a module
+  constant) — every caller silently shares one stream.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.lint import (LintContext, LintRule, module_scope_nodes,
+                                 register_rule, resolved_name)
+
+_SEEDED_CONSTRUCTORS = ("default_rng", "Generator", "SeedSequence",
+                        "RandomState", "Philox", "PCG64")
+_KEY_CALLS = ("jax.random.PRNGKey", "jax.random.key")
+
+
+def _is_global_numpy_random(target: str) -> bool:
+    for root in ("numpy.random.", "np.random."):
+        if target.startswith(root):
+            return target[len(root):] not in _SEEDED_CONSTRUCTORS
+    return False
+
+
+@register_rule
+class ModuleStateRandomnessRule(LintRule):
+    rule_id = "RPR005"
+    title = "module-state randomness"
+    allow_kind = "randomness"
+    scope = ("src/",)
+
+    def check(self, ctx: LintContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = resolved_name(ctx, node.func)
+            if target is None:
+                continue
+            if _is_global_numpy_random(target):
+                f = ctx.finding(
+                    self, node,
+                    f"'{target}' draws from numpy's global RNG state — use "
+                    "a seeded np.random.default_rng(...) generator, or "
+                    "annotate with '# repro: allow-randomness(<reason>)'")
+                if f:
+                    yield f
+        for node in module_scope_nodes(ctx.tree):
+            if isinstance(node, ast.Call) and \
+                    resolved_name(ctx, node.func) in _KEY_CALLS:
+                f = ctx.finding(
+                    self, node,
+                    "PRNG key minted at module scope — every caller shares "
+                    "one stream; take keys as arguments (or a documented "
+                    "default constant) instead")
+                if f:
+                    yield f

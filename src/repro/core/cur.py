@@ -249,5 +249,5 @@ def adaptive_row_indices(A: jnp.ndarray, base: jnp.ndarray, key: jax.Array,
 
 def relative_error(A: jnp.ndarray, approx: CURApprox) -> jnp.ndarray:
     A32 = A.astype(jnp.float32)
-    Rm = A32 - approx.dense().astype(jnp.float32)
+    Rm = A32 - approx.dense().astype(jnp.float32)  # repro: allow-dense(CUR error oracle — A is already dense)
     return jnp.sum(Rm * Rm) / jnp.sum(A32 * A32)

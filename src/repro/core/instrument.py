@@ -82,7 +82,7 @@ class CountingOperator(SPSDOperator):
     def full(self):
         self.counts["fulls"] += 1
         self.counts["entries"] += self.n * self.n
-        return self.inner.full()
+        return self.inner.full()  # repro: allow-dense(counting passthrough — the meter itself)
 
     # -- streaming protocol (counted per pass) ------------------------------
 

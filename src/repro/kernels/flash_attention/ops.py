@@ -1,4 +1,11 @@
-"""Public jit'd wrapper: padding + block-size policy for flash attention."""
+"""Public jit'd wrapper: padding + block-size policy for flash attention.
+
+Backend selection (interpret mode on CPU containers, compiled on real TPU)
+is resolved at *call* time in the un-jitted wrapper and threaded into the
+jit cache as a static argument — the same idiom as
+``repro.kernels.pairwise.ops`` — so flipping the backend after import can
+never run a stale interpret decision.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -10,7 +17,14 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import kernel as _k
 from repro.kernels.flash_attention import ref as _ref
 
-_INTERPRET = jax.default_backend() != "tpu"
+
+def _interpret_mode() -> bool:
+    """CPU containers interpret the TPU kernel; real TPU compiles it.
+
+    A function (not a module constant) on purpose: the backend may be chosen
+    after this module is imported, so the decision must be re-read per call.
+    """
+    return jax.default_backend() != "tpu"
 
 
 def _pad_seq(x: jnp.ndarray, mult: int) -> jnp.ndarray:
@@ -22,17 +36,11 @@ def _pad_seq(x: jnp.ndarray, mult: int) -> jnp.ndarray:
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "use_pallas",
-                                   "block_q", "block_k"))
-def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                    causal: bool = True, window: Optional[int] = None,
-                    use_pallas: bool = True,
-                    block_q: int = _k.DEFAULT_BQ,
-                    block_k: int = _k.DEFAULT_BK) -> jnp.ndarray:
-    """Attention over q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D) with GQA broadcast.
-
-    Decode (Sq < Sk) right-aligns queries to keys; ``window`` is a sliding
-    window measured in key positions behind the query.
-    """
+                                   "block_q", "block_k", "interpret"))
+def _flash_attention_jit(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         causal: bool, window: Optional[int],
+                         use_pallas: bool, block_q: int, block_k: int,
+                         interpret: bool) -> jnp.ndarray:
     if not use_pallas:
         return _ref.attention(q, k, v, causal=causal, window=window)
     sq, sk = q.shape[2], k.shape[2]
@@ -43,5 +51,22 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     vp = _pad_seq(v, bk)
     out = _k.flash_attention_padded(
         qp, kp, vp, sq=sq, sk=sk, causal=causal, window=window,
-        bq=bq, bk=bk, interpret=_INTERPRET)
+        bq=bq, bk=bk, interpret=interpret)
     return out[:, :, :sq, :]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    use_pallas: bool = True,
+                    block_q: int = _k.DEFAULT_BQ,
+                    block_k: int = _k.DEFAULT_BK,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Attention over q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D) with GQA broadcast.
+
+    Decode (Sq < Sk) right-aligns queries to keys; ``window`` is a sliding
+    window measured in key positions behind the query.
+    """
+    if interpret is None:
+        interpret = _interpret_mode()
+    return _flash_attention_jit(q, k, v, causal, window, use_pallas,
+                                block_q, block_k, interpret)

@@ -1,5 +1,6 @@
 """Pure-jnp oracle for tiled attention (causal / GQA / sliding window)."""
 from __future__ import annotations
+# repro: allow-file(RPR003: dense f32 oracle — operands are cast to f32 before every contraction)
 
 from typing import Optional
 

@@ -1,7 +1,13 @@
-"""Public jit'd wrapper for the fused landmark read."""
+"""Public jit'd wrapper for the fused landmark read.
+
+Interpret-vs-compile is resolved per call in the un-jitted wrapper (never at
+import) and rides the jit cache as a static argument — the
+``pairwise.ops._interpret_mode`` idiom.
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -9,19 +15,36 @@ import jax.numpy as jnp
 from repro.kernels.landmark_attention import kernel as _k
 from repro.kernels.landmark_attention import ref as _ref
 
-_INTERPRET = jax.default_backend() != "tpu"
+
+def _interpret_mode() -> bool:
+    """CPU containers interpret the TPU kernel; real TPU compiles it.
+
+    A function (not a module constant) on purpose: the backend may be chosen
+    after this module is imported, so the decision must be re-read per call.
+    """
+    return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
-def landmark_read(Q: jnp.ndarray, k_land: jnp.ndarray, UV: jnp.ndarray,
-                  U1: jnp.ndarray, offset: jnp.ndarray,
-                  use_pallas: bool = True) -> jnp.ndarray:
-    """Attend Q (m, d) to a prebuilt LandmarkState -> (m, dv)."""
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def _landmark_read_jit(Q: jnp.ndarray, k_land: jnp.ndarray, UV: jnp.ndarray,
+                       U1: jnp.ndarray, offset: jnp.ndarray,
+                       use_pallas: bool, interpret: bool) -> jnp.ndarray:
     if not use_pallas:
         return _ref.landmark_read(Q, k_land, UV, U1, offset)
     m = Q.shape[0]
     pad = (-m) % _k.BLOCK_Q
     Qp = jnp.pad(Q, ((0, pad), (0, 0))) if pad else Q
     out = _k.landmark_read_padded(Qp, k_land, UV, U1, offset,
-                                  interpret=_INTERPRET)
+                                  interpret=interpret)
     return out[:m]
+
+
+def landmark_read(Q: jnp.ndarray, k_land: jnp.ndarray, UV: jnp.ndarray,
+                  U1: jnp.ndarray, offset: jnp.ndarray,
+                  use_pallas: bool = True,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Attend Q (m, d) to a prebuilt LandmarkState -> (m, dv)."""
+    if interpret is None:
+        interpret = _interpret_mode()
+    return _landmark_read_jit(Q, k_land, UV, U1, offset, use_pallas,
+                              interpret)

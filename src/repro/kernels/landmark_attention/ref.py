@@ -7,6 +7,7 @@ Given the context-side factors of the paper's fast model
     out  = (cvec @ UV) / max(cvec @ U1, eps)         (m, dv)
 """
 from __future__ import annotations
+# repro: allow-file(RPR003: dense f32 oracle — operands are cast to f32 before every contraction)
 
 import jax.numpy as jnp
 

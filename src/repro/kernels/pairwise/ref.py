@@ -6,6 +6,7 @@ check the spec definitions themselves, not just the Pallas plumbing around
 them.  Small shapes only: every oracle materializes the full block.
 """
 from __future__ import annotations
+# repro: allow-file(RPR003: dense f32 oracles — operands are cast to f32 before every contraction)
 
 import jax.numpy as jnp
 

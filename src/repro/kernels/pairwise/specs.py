@@ -72,7 +72,7 @@ PRECISIONS = ("f32", "bf16_f32acc")
 def tile_dtype(precision: str):
     """Operand dtype of a precision policy (accumulators are always f32)."""
     if precision == "bf16_f32acc":
-        return jnp.bfloat16
+        return jnp.bfloat16  # repro: allow-dtype(the precision policy's own definition site)
     if precision == "f32":
         return jnp.float32
     raise ValueError(f"unknown precision {precision!r}; one of {PRECISIONS}")

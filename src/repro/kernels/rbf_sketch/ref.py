@@ -1,5 +1,6 @@
 """Pure-jnp oracle for the fused RBF block kernel."""
 from __future__ import annotations
+# repro: allow-file(RPR003: dense f32 oracle — operands are cast to f32 before every contraction)
 
 import jax.numpy as jnp
 

@@ -64,6 +64,14 @@ class KernelModelArtifact:
     selection: str = "uniform"          # SelectionPolicy that chose P
     landmark_indices: Optional[jnp.ndarray] = None
     use_pallas: bool = True
+    # sign-split plan for l1dist specs, built ONCE over the landmark points
+    # at precompute time and persisted with the artifact: l1_route is
+    # 'mxu_signsplit' (l1_edges holds the segment table), 'vpu_loop' (plan
+    # infeasible — the VPU decision itself is replicated), or None
+    # (non-l1dist spec, or a legacy checkpoint from before the field — the
+    # operator falls back to its lazy per-instance build)
+    l1_edges: Optional[jnp.ndarray] = None
+    l1_route: Optional[str] = None
 
     @property
     def c(self) -> int:
@@ -81,7 +89,15 @@ class KernelModelArtifact:
         spec = self.spec
         if precision is not None:
             spec = spec.with_precision(precision)
-        return PairwiseKernel(self.X_landmarks, spec, up)
+        op = PairwiseKernel(self.X_landmarks, spec, up)
+        if self.l1_route is not None and spec.stat == "l1dist":
+            # restore the precomputed sign-split plan instead of letting the
+            # operator rebuild it host-side per instance (ROADMAP gap); a
+            # persisted 'vpu_loop' decision seeds None so routing is
+            # byte-identical to build time
+            op._l1_edges_cache = \
+                self.l1_edges if self.l1_route == "mxu_signsplit" else None
+        return op
 
     def refit(self, y: jnp.ndarray) -> "KernelModelArtifact":
         """New KRR targets on the SAME kernel via the cached Woodbury
@@ -103,6 +119,7 @@ def _meta(artifact: KernelModelArtifact) -> str:
         "alpha": float(artifact.alpha),
         "selection": artifact.selection,
         "use_pallas": bool(artifact.use_pallas),
+        "l1_route": artifact.l1_route,
         "format": 1,
     })
 
@@ -121,6 +138,8 @@ def artifact_to_tree(artifact: KernelModelArtifact) -> dict:
     }
     if artifact.landmark_indices is not None:
         tree["landmark_indices"] = artifact.landmark_indices
+    if artifact.l1_edges is not None:
+        tree["l1_edges"] = artifact.l1_edges
     return tree
 
 
@@ -132,6 +151,7 @@ def artifact_from_tree(tree: dict) -> KernelModelArtifact:
     # before the field existed restore as f32 (the old behavior)
     spec = spec.with_precision(meta.get("spec_precision", "f32"))
     idx = tree.get("landmark_indices")
+    edges = tree.get("l1_edges")
     return KernelModelArtifact(
         X_landmarks=jnp.asarray(tree["X_landmarks"]),
         C=jnp.asarray(tree["C"]),
@@ -144,6 +164,10 @@ def artifact_from_tree(tree: dict) -> KernelModelArtifact:
         selection=meta["selection"],
         landmark_indices=None if idx is None else jnp.asarray(idx),
         use_pallas=bool(meta["use_pallas"]),
+        # legacy checkpoints carry no l1_route key -> None -> the operator's
+        # lazy per-instance plan build (the pre-field behavior)
+        l1_edges=None if edges is None else jnp.asarray(edges),
+        l1_route=meta.get("l1_route"),
     )
 
 
@@ -215,13 +239,26 @@ def build_artifact(
     E = E[:, ::-1]
     head_feat = E[:, :r] * jnp.sqrt(lam_u[:r])[None, :]
 
+    # Sign-split plan for the landmark operator, built once here (host-side
+    # pass over the c landmark points) and persisted with the artifact so
+    # warm-booted replicas and every landmark_operator() instance share it
+    # instead of rebuilding per instance.
+    X_land = jnp.take(X, ap.P_indices, axis=0)
+    l1_edges, l1_route = None, None
+    if spec.stat == "l1dist":
+        from repro.kernels.pairwise import signsplit
+        plan = signsplit.build_plan(X_land)
+        l1_edges = None if plan is None else plan.edges
+        l1_route = "vpu_loop" if plan is None else "mxu_signsplit"
+
     return KernelModelArtifact(
-        X_landmarks=jnp.take(X, ap.P_indices, axis=0),
+        X_landmarks=X_land,
         C=C32, U=U32,
         heads={"krr": head_krr, "kpca": head_kpca, "features": head_feat},
         woodbury_M=M, kpca_eigvals=eres.eigenvalues,
         spec=spec, alpha=a, selection=str(selection),
-        landmark_indices=ap.P_indices, use_pallas=use_pallas)
+        landmark_indices=ap.P_indices, use_pallas=use_pallas,
+        l1_edges=l1_edges, l1_route=l1_route)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,16 @@
+"""BAD: unannotated operator materializations (RPR001)."""
+import jax.numpy as jnp
+
+
+def leaky_error(Kop, approx):
+    Kd = Kop.full()                       # flagged: no allow-dense reason
+    R = Kd - approx.dense()               # flagged: same
+    return jnp.sum(R * R)
+
+
+def annotated_ok(Kop):
+    return Kop.full()  # repro: allow-dense(fixture exemplar of a waived oracle)
+
+
+def shape_call_ok():
+    return jnp.full((4, 4), 0.0)          # takes args: not an operator oracle

@@ -1,0 +1,21 @@
+"""BAD: the PR-3 bug class — backend captured at import time (RPR002).
+
+Reconstruction of the original defect: a module constant freezes the
+interpret decision when the module is imported, so tests (or launchers)
+that select a platform afterwards silently run the stale choice.
+"""
+import jax
+
+_INTERPRET = jax.default_backend() != "tpu"     # flagged: import-time capture
+N_DEVICES = jax.device_count()                  # flagged
+DEVICES = jax.devices()                         # flagged
+
+
+def fine_per_call() -> bool:
+    return jax.default_backend() != "tpu"       # resolved per call: OK
+
+
+def kernel(x, interpret=None):
+    if interpret is None:
+        interpret = fine_per_call()
+    return x

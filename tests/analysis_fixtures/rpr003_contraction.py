@@ -1,0 +1,22 @@
+"""BAD: contractions without preferred_element_type (RPR003)."""
+import jax
+import jax.numpy as jnp
+
+_DN = (((1,), (0,)), ((), ()))
+
+
+def leaky_matmul(K, V):
+    return K @ V                                     # flagged: '@'
+
+
+def leaky_dot_general(K, V):
+    return jax.lax.dot_general(K, V, dimension_numbers=_DN)   # flagged
+
+
+def leaky_einsum(K, V):
+    return jnp.einsum("ij,jk->ik", K, V)             # flagged
+
+
+def accumulated_ok(K, V):
+    return jax.lax.dot_general(K, V, dimension_numbers=_DN,
+                               preferred_element_type=jnp.float32)

@@ -1,0 +1,14 @@
+"""BAD: low-precision dtype hard-coded instead of spec.precision (RPR004)."""
+import jax.numpy as jnp
+
+
+def leaky_tile_cast(K):
+    return K.astype(jnp.bfloat16)                    # flagged: literal dtype
+
+
+def leaky_string_dtype(K):
+    return K.astype("float16")                       # flagged: literal dtype
+
+
+def policy_routed_ok(K, spec):
+    return K.astype(spec.tile_dtype())

@@ -1,0 +1,22 @@
+"""BAD: module-state randomness (RPR005)."""
+import jax
+import numpy as np
+
+_SHARED_KEY = jax.random.PRNGKey(0)      # flagged: module-scope key minting
+
+
+def leaky_global_draw(n):
+    return np.random.rand(n)             # flagged: numpy global RNG state
+
+
+def leaky_reseed(seed):
+    np.random.seed(seed)                 # flagged: mutates global state
+
+
+def seeded_ok(n, seed=0):
+    rng = np.random.default_rng(seed)    # seeded generator: OK
+    return rng.standard_normal(n)
+
+
+def keyed_ok(key, n):
+    return jax.random.normal(key, (n,))  # key taken as argument: OK

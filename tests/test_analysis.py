@@ -1,0 +1,299 @@
+"""Regression suite for the static analysis gate (`repro.analysis`).
+
+Every shipped lint rule must flag its known-bad fixture under
+``tests/analysis_fixtures/`` (these tests FAIL if a rule is disabled or its
+detection decays), and both jaxpr checks must catch deliberately broken
+entry points: a densifying toy pipeline and a policy whose declared
+``sweep_budget()`` lies about its metered sweeps.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import findings as findings_lib
+from repro.analysis import jaxpr_check
+from repro.analysis import lint
+from repro.analysis.__main__ import main as analysis_main
+from repro.core import selection
+from repro.core import sweep as sweep_lib
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# rule id -> (fixture file, number of deliberate violations in it)
+RULE_FIXTURES = {
+    "RPR001": ("rpr001_densify.py", 2),
+    "RPR002": ("rpr002_import_capture.py", 3),
+    "RPR003": ("rpr003_contraction.py", 3),
+    "RPR004": ("rpr004_dtype.py", 2),
+    "RPR005": ("rpr005_randomness.py", 3),
+}
+
+
+# ---------------------------------------------------------------------------
+# AST rules vs fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_rule_flags_its_fixture(rule_id):
+    """Each rule finds exactly the deliberate violations in its fixture —
+    this test fails if the rule is disabled, unregistered, or decays."""
+    fname, expected = RULE_FIXTURES[rule_id]
+    path = os.path.join(FIXTURES, fname)
+    fs = lint.lint_file(path, rules=[lint.get_rule(rule_id)],
+                        ignore_scope=True)
+    flagged = [f for f in fs if f.rule == rule_id]
+    assert len(flagged) == expected, [f.format() for f in fs]
+    assert all(f.line > 0 and f.snippet for f in flagged)
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULE_FIXTURES))
+def test_fixture_is_rule_specific(rule_id):
+    """With the rule removed from the active set, its fixture goes quiet —
+    the findings come from the rule, not engine side effects."""
+    fname, _ = RULE_FIXTURES[rule_id]
+    path = os.path.join(FIXTURES, fname)
+    others = [r for r in lint.registered_rules() if r.rule_id != rule_id]
+    fs = lint.lint_file(path, rules=others, ignore_scope=True)
+    assert all(f.rule != rule_id for f in fs)
+
+
+def test_all_five_rules_registered():
+    ids = [r.rule_id for r in lint.registered_rules()]
+    assert ids == sorted(RULE_FIXTURES)
+
+
+def test_head_tree_is_lint_clean():
+    """The acceptance bar: the shipped tree has zero lint findings (every
+    intentional oracle is annotated with a reason)."""
+    fs = lint.lint_paths([os.path.join(REPO_ROOT, "src")],
+                         repo_root=REPO_ROOT)
+    assert fs == [], [f.format() for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# allow-annotation semantics
+# ---------------------------------------------------------------------------
+
+def test_annotation_waives_on_same_and_previous_line():
+    same = "K = op.full()  # repro: allow-dense(oracle, n small)\n"
+    above = "# repro: allow-dense(oracle, n small)\nK = op.full()\n"
+    for src in (same, above):
+        assert lint.lint_source(src, "src/repro/core/m.py") == []
+
+
+def test_annotation_without_reason_is_itself_a_finding():
+    src = "# repro: allow-dense()\nK = op.full()\n"
+    rules = {f.rule for f in lint.lint_source(src, "src/repro/core/m.py")}
+    assert rules == {"RPR000", "RPR001"}  # empty waiver AND the violation
+
+
+def test_file_level_allow_names_one_rule():
+    src = ("# repro: allow-file(RPR003: dense oracle module)\n"
+           "import jax.numpy as jnp\n"
+           "y = a @ b\n"
+           "dt = jnp.bfloat16\n")
+    fs = lint.lint_source(src, "src/repro/kernels/x/m.py")
+    assert {f.rule for f in fs} == {"RPR004"}  # RPR003 waived, RPR004 not
+
+
+def test_rule_scopes_limit_where_rules_fire():
+    # '@' contractions are a kernels/-only concern
+    src = "y = a @ b\n"
+    assert lint.lint_source(src, "src/repro/core/m.py") == []
+    assert [f.rule for f in lint.lint_source(
+        src, "src/repro/kernels/m.py")] == ["RPR003"]
+
+
+# ---------------------------------------------------------------------------
+# baseline: grandfathered debt shrinks, never grows
+# ---------------------------------------------------------------------------
+
+def test_baseline_grandfathers_existing_but_blocks_new(tmp_path):
+    path = "src/repro/core/m.py"
+    fs1 = lint.lint_source("K = op.full()\n", path)
+    bl = tmp_path / "baseline.json"
+    findings_lib.write_baseline(str(bl), fs1)
+    baseline = findings_lib.load_baseline(str(bl))
+
+    new, stale = findings_lib.compare_to_baseline(fs1, baseline)
+    assert new == [] and stale == []
+
+    # a second occurrence of the same violation is NEW — debt cannot grow
+    fs2 = lint.lint_source("K = op.full()\nJ = K2.full()\n", path)
+    new2, _ = findings_lib.compare_to_baseline(fs2, baseline)
+    assert len(new2) == 1
+
+    # fixing the grandfathered finding leaves a shrinkable stale entry
+    new3, stale3 = findings_lib.compare_to_baseline([], baseline)
+    assert new3 == [] and len(stale3) == 1
+
+
+def test_fingerprint_survives_line_shifts():
+    path = "src/repro/core/m.py"
+    (f1,) = lint.lint_source("K = op.full()\n", path)
+    (f2,) = lint.lint_source("x = 1\n\n\nK = op.full()\n", path)
+    assert f1.line != f2.line
+    assert f1.fingerprint() == f2.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _write_bad_tree(tmp_path):
+    mod = tmp_path / "src" / "repro" / "core"
+    mod.mkdir(parents=True)
+    (mod / "leak.py").write_text("K = op.full()\n")
+
+
+def test_cli_exits_nonzero_on_findings(tmp_path, monkeypatch):
+    _write_bad_tree(tmp_path)
+    monkeypatch.chdir(tmp_path)
+    assert analysis_main(["--paths", "src", "--no-jaxpr", "--quiet"]) == 1
+
+
+def test_cli_baseline_and_json_report(tmp_path, monkeypatch):
+    _write_bad_tree(tmp_path)
+    monkeypatch.chdir(tmp_path)
+    # grandfather the findings, then the gate passes and reports them
+    assert analysis_main(["--paths", "src", "--no-jaxpr", "--quiet",
+                          "--baseline", "bl.json",
+                          "--write-baseline"]) == 0
+    rc = analysis_main(["--paths", "src", "--no-jaxpr", "--quiet",
+                        "--baseline", "bl.json",
+                        "--json", "report.json"])
+    assert rc == 0
+    report = json.loads((tmp_path / "report.json").read_text())
+    assert report["total"] == 1 and report["new"] == 0
+    assert report["by_rule"] == {"RPR001": 1}
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, monkeypatch):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "src" / "clean.py").write_text("x = 1\n")
+    monkeypatch.chdir(tmp_path)
+    assert analysis_main(["--paths", "src", "--no-jaxpr", "--quiet"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# jaxpr pass: densify detector + sweep-budget verifier + precision scan
+# ---------------------------------------------------------------------------
+
+def test_densify_detector_fails_toy_entry():
+    """A deliberately densifying pipeline (K = full(), then K @ V) must
+    trip RPRJ01 — the compile-time booby trap."""
+    op = jaxpr_check.smoke_operator(n=256, use_pallas=False)
+
+    def toy(key):
+        K = op.inner.full()
+        return K @ jax.random.normal(key, (op.n, 4), dtype=jnp.float32)
+
+    closed = jax.make_jaxpr(toy)(jax.random.PRNGKey(0))
+    fs = jaxpr_check.scan_densify(closed, op.n, "toy_dense")
+    assert fs and all(f.rule == "RPRJ01" for f in fs)
+
+
+def test_densify_detector_passes_streaming_entry():
+    """The real streaming path at the same n stays under the threshold."""
+    fs, rep = jaxpr_check.check_policy_select("uniform")
+    assert fs == [], [f.format() for f in fs]
+    assert rep["ok"]
+
+
+def test_lying_sweep_budget_is_caught():
+    """A policy that declares 0 sweeps but spends 1 must trip RPRJ02 —
+    declarations are verified against the abstract trace, not trusted."""
+    class LyingPolicy(selection.SelectionPolicy):
+        name = "lying_fixture"
+        rounds = 0           # declared budget: zero kernel sweeps
+
+        def select(self, K, key, c, *, block_size=None, mesh=None,
+                   mask=None):
+            V = jnp.zeros((K.n, 4), jnp.float32)
+            K.sweep([sweep_lib.MatmulPlan(V)], block_size=block_size)
+            return jax.random.choice(key, K.n, shape=(c,), replace=False)
+
+    selection.register_policy("lying_fixture")(LyingPolicy)
+    try:
+        fs, rep = jaxpr_check.check_policy_select("lying_fixture")
+        assert any(f.rule == "RPRJ02" for f in fs), \
+            [f.format() for f in fs]
+        assert not rep["ok"]
+    finally:
+        selection._POLICIES.pop("lying_fixture")
+
+
+def test_fast_model_one_sweep_contract_verified():
+    """fast_model(uniform, gaussian) == exactly 1 sweep, statically."""
+    fs, rep = jaxpr_check.check_fast_model("uniform")
+    assert fs == [], [f.format() for f in fs]
+    assert rep["expected"]["sweeps"] == 1
+    assert rep["counts"]["sweeps"] == 1
+
+
+def test_unaccumulated_bf16_contraction_is_caught():
+    """dot_general with bf16 operands and no f32 accumulation -> RPRJ03."""
+    dn = (((1,), (0,)), ((), ()))
+
+    def bad(a, b):
+        return jax.lax.dot_general(a.astype(jnp.bfloat16),
+                                   b.astype(jnp.bfloat16),
+                                   dimension_numbers=dn)
+
+    closed = jax.make_jaxpr(bad)(jnp.zeros((8, 8)), jnp.zeros((8, 8)))
+    fs = jaxpr_check.scan_contractions(closed, "toy_bf16")
+    assert fs and fs[0].rule == "RPRJ03"
+
+
+def test_bf16_policy_sweep_accumulates_f32_on_head():
+    """The shipped bf16_f32acc sweep template passes the accumulation scan
+    (and its trace contains at least one low-precision dot to scan)."""
+    fs, rep = jaxpr_check.check_kernel_precision("rbf")
+    assert fs == [], [f.format() for f in fs]
+
+    opc = jaxpr_check.smoke_operator(precision="bf16_f32acc")
+    closed = jax.make_jaxpr(
+        lambda V: opc.sweep([sweep_lib.MatmulPlan(V)],
+                            block_size=jaxpr_check.SMOKE_BLOCK))(
+        jnp.zeros((opc.n, 8), jnp.float32))
+    bf16_dots = [
+        eqn for eqn in jaxpr_check.iter_eqns(closed)
+        if eqn.primitive.name == "dot_general"
+        and any(getattr(getattr(v, "aval", None), "dtype", None)
+                == jnp.bfloat16 for v in eqn.invars)]
+    assert bf16_dots, "expected the bf16 tile dots to appear in the trace"
+
+
+def test_probe_key_default_is_documented_and_explicit_keys_differ():
+    """Satellite: relative_error's key=None path uses the documented
+    DEFAULT_PROBE_SEED, and two explicit keys give different estimates."""
+    from repro.core import spsd
+    from repro.core.kernelop import PairwiseKernel
+    from repro.kernels.pairwise import specs as pw_specs
+
+    rng = np.random.default_rng(5)
+    X = jnp.asarray(rng.standard_normal((300, 4)), jnp.float32)
+    op = PairwiseKernel(X, pw_specs.get_spec("rbf", sigma=1.5), False)
+    ap = spsd.fast_model(op, jax.random.PRNGKey(1), c=10, s=20,
+                         s_sketch="gaussian", streaming=True)
+
+    e_default = float(spsd.relative_error(op, ap, method="hutchinson",
+                                          probes=8))
+    e_seed0 = float(spsd.relative_error(
+        op, ap, method="hutchinson", probes=8,
+        key=jax.random.PRNGKey(spsd.DEFAULT_PROBE_SEED)))
+    ka, kb = jax.random.PRNGKey(123), jax.random.PRNGKey(456)
+    e_a = float(spsd.relative_error(op, ap, method="hutchinson", probes=8,
+                                    key=ka))
+    e_b = float(spsd.relative_error(op, ap, method="hutchinson", probes=8,
+                                    key=kb))
+
+    assert e_default == e_seed0          # key=None IS the documented seed
+    assert e_a != e_b                    # explicit keys drive the probes
+    assert np.isfinite([e_default, e_a, e_b]).all()

@@ -339,3 +339,50 @@ def test_artifact_spec_precision_round_trips_through_checkpoint(
     loaded = load_artifact(str(tmp_path / "ckpt"))
     assert loaded.spec is bf_art.spec          # registry-cached identity
     assert loaded.landmark_operator().precision == "bf16_f32acc"
+
+
+def test_l1_signsplit_plan_cached_on_artifact_and_warm_boot(tmp_path):
+    """An l1dist artifact persists its sign-split plan: every operator the
+    artifact hands out shares the SAME edges array (no per-instance
+    rebuilds), and a warm boot restores plan identity from the checkpoint."""
+    rng = np.random.default_rng(11)
+    X = jnp.asarray(rng.integers(0, 5, size=(120, 6)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(120), jnp.float32)
+    spec = pw_specs.get_spec("laplacian", gamma=0.3)
+    art = build_artifact(X, y, spec, c=24, s=48, alpha=1.0, n_components=4,
+                         key=jax.random.PRNGKey(3), use_pallas=True)
+
+    assert art.l1_route == "mxu_signsplit"
+    assert art.l1_edges is not None
+    op_a, op_b = art.landmark_operator(), art.landmark_operator()
+    assert op_a.l1_edges() is art.l1_edges
+    assert op_b.l1_edges() is art.l1_edges      # shared, not rebuilt
+
+    save_artifact(str(tmp_path), art, step=0)
+
+    def build_fn():  # warm boot must never fall back to a rebuild
+        raise AssertionError("rebuild called on a warm store")
+
+    loaded, rec = load_or_rebuild(str(tmp_path), build_fn)
+    assert rec.warm
+    assert loaded.l1_route == "mxu_signsplit"
+    assert np.array_equal(np.asarray(loaded.l1_edges),
+                          np.asarray(art.l1_edges))
+    assert loaded.landmark_operator().l1_edges() is loaded.l1_edges
+
+    # the restored plan serves: answers match the dense oracle
+    q = jnp.asarray(rng.integers(0, 5, size=(17, 6)), jnp.float32)
+    a = serve_kernel_model(loaded, [QueryRequest(q, "krr")])
+    assert parity_gap(a[0].out, dense_oracle(loaded, q, "krr")) <= 1e-4
+
+
+def test_rbf_artifact_has_no_l1_plan():
+    """Non-l1dist specs carry no plan: route and edges stay None and the
+    operator's lazy path is untouched."""
+    rng = np.random.default_rng(12)
+    X = jnp.asarray(rng.standard_normal((90, 5)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(90), jnp.float32)
+    art = build_artifact(X, y, pw_specs.get_spec("rbf", sigma=1.0),
+                         c=18, s=36, alpha=1.0, n_components=4,
+                         key=jax.random.PRNGKey(4), use_pallas=True)
+    assert art.l1_route is None and art.l1_edges is None
