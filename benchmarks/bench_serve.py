@@ -3,6 +3,7 @@ requests/s through ``KernelServer`` at several client-concurrency loads.
 
     PYTHONPATH=src python -m benchmarks.bench_serve
     PYTHONPATH=src python -m benchmarks.bench_serve --loads 1 4 16
+    PYTHONPATH=src python -m benchmarks.bench_serve --append   # n=3000, b=64
 
 Each load runs ``clients`` threads submitting mixed-size KRR/KPCA/feature
 queries back-to-back for a fixed request budget; the continuous-batching
@@ -11,6 +12,13 @@ land in the smoke-bench payload (``BENCH_<tag>.json``, key ``"serve"``) so
 the serving-latency trajectory is tracked per PR alongside the sweep
 speedups.  Absolute ms at CI shapes are noise; the signal is p99/p50 shape
 (batching fairness) and requests/s trends.
+
+``--append`` benches the incremental maintenance path instead: one full
+``build_artifact`` (the rebuild cost a naive corpus-growth strategy pays
+per batch) against the per-batch ``append_rows`` absorb (ONE thin b×c
+launch + rank-b refresh).  The row lands under ``"serve_append"`` with the
+speedup ratio — the ≥5× acceptance at n=3000, b=64 — tracked per PR by
+``compare_bench``.
 """
 from __future__ import annotations
 
@@ -106,6 +114,66 @@ def run(n: int = 240, d: int = 24, c: int = 48, s: int = 96,
     return rows
 
 
+def run_append(n: int = 3000, d: int = 24, c: int = 48, s: int = 96,
+               batches: int = 8, batch_rows: int = 64,
+               seed: int = 0) -> List[dict]:
+    """One row: full ``build_artifact`` wall-clock vs per-batch
+    ``append_rows`` absorb at the same shape.
+
+    {n, batch_rows, batches, build_ms, append_p50_ms, append_p99_ms,
+    speedup, rows_per_s, append_sweeps, drift} — ``speedup`` is
+    build_ms / append_p50_ms, the factor the incremental path saves over
+    rebuilding to absorb one batch (the ≥5× acceptance at n=3000, b=64).
+    """
+    from repro.serve import append_rows, init_state
+
+    X, y = synth_problem(n, d, seed)
+    spec = pw_specs.get_spec("rbf", sigma=1.0)
+
+    # a throwaway build at a smaller n warms the sweep/selection jit caches
+    # so build_ms times the real work, not compilation
+    Xw, yw = synth_problem(max(2 * c, 128), d, seed + 1)
+    build_artifact(Xw, yw, spec, c=c, s=s, key=jax.random.PRNGKey(seed))
+    t0 = time.perf_counter()
+    artifact = build_artifact(X, y, spec, c=c, s=s,
+                              key=jax.random.PRNGKey(seed))
+    jax.block_until_ready(artifact.C)
+    build_ms = (time.perf_counter() - t0) * 1e3
+
+    state = init_state(artifact, np.asarray(y))
+    op = CountingOperator(artifact.landmark_operator())
+    rng = np.random.default_rng(seed + 3)
+
+    def batch():
+        Xb = rng.standard_normal((batch_rows, d)).astype(np.float32)
+        yb = rng.standard_normal(batch_rows).astype(np.float32)
+        return Xb, yb
+
+    # warm the thin-launch compile, then measure
+    artifact, state, _, _ = append_rows(artifact, state, *batch(), op=op)
+    op.reset()
+    lat_s, stats = [], None
+    for _ in range(batches):
+        Xb, yb = batch()
+        t0 = time.perf_counter()
+        artifact, state, stats, _ = append_rows(artifact, state, Xb, yb,
+                                                op=op)
+        jax.block_until_ready(artifact.heads["krr"])
+        lat_s.append(time.perf_counter() - t0)
+
+    p50 = percentile_ms(lat_s, 50)
+    return [{
+        "n": n, "batch_rows": batch_rows, "batches": batches,
+        "build_ms": round(build_ms, 3),
+        "append_p50_ms": round(p50, 3),
+        "append_p99_ms": round(percentile_ms(lat_s, 99), 3),
+        "speedup": round(build_ms / p50, 2),
+        "rows_per_s": round(batch_rows * batches / sum(lat_s), 1),
+        "append_sweeps": op.counts["append_sweeps"],
+        "drift": round(float(stats.drift), 4),
+    }]
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--n", type=int, default=240)
@@ -115,7 +183,33 @@ def main(argv=None) -> int:
     p.add_argument("--loads", type=int, nargs="+", default=[1, 4, 16])
     p.add_argument("--requests-per-client", type=int, default=8)
     p.add_argument("--max-wait-ms", type=float, default=2.0)
+    p.add_argument("--append", action="store_true",
+                   help="bench incremental append_rows vs a full rebuild "
+                        "(uses --append-n/--batches/--batch-rows)")
+    p.add_argument("--append-n", type=int, default=3000)
+    p.add_argument("--batches", type=int, default=8)
+    p.add_argument("--batch-rows", type=int, default=64)
+    p.add_argument("--min-speedup", type=float, default=None,
+                   help="fail unless append speedup >= this (acceptance "
+                        "gate: 5x at n=3000, b=64)")
     args = p.parse_args(argv)
+
+    if args.append:
+        rows = run_append(n=args.append_n, d=args.d, c=args.c, s=args.s,
+                          batches=args.batches, batch_rows=args.batch_rows)
+        print_table(
+            "incremental append vs full rebuild (append_rows)",
+            ["n", "b", "batches", "build_ms", "append_p50_ms", "speedup",
+             "rows/s", "append_sweeps", "drift"],
+            [[r["n"], r["batch_rows"], r["batches"], r["build_ms"],
+              r["append_p50_ms"], r["speedup"], r["rows_per_s"],
+              r["append_sweeps"], r["drift"]] for r in rows])
+        if args.min_speedup is not None and \
+                rows[0]["speedup"] < args.min_speedup:
+            print(f"FAIL: append speedup {rows[0]['speedup']}x < "
+                  f"required {args.min_speedup}x")
+            return 1
+        return 0
 
     rows = run(n=args.n, d=args.d, c=args.c, s=args.s,
                loads=tuple(args.loads),

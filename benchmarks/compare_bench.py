@@ -134,6 +134,14 @@ def compare(fresh: dict, base: dict, tol_speedup: float = 0.5,
             f"{f_serve[cl]['p50_ms']:.1f} ms, req/s "
             f"{b_serve[cl]['req_per_s']:.1f} -> "
             f"{f_serve[cl]['req_per_s']:.1f}")
+    f_app = _index(fresh.get("serve_append", []), "n")
+    b_app = _index(base.get("serve_append", []), "n")
+    for nn in sorted(set(f_app) & set(b_app)):
+        advisories.append(
+            f"serve_append n={nn}: speedup {b_app[nn]['speedup']:.1f}x -> "
+            f"{f_app[nn]['speedup']:.1f}x (append p50 "
+            f"{b_app[nn]['append_p50_ms']:.1f} -> "
+            f"{f_app[nn]['append_p50_ms']:.1f} ms)")
     if fresh.get("total_seconds") and base.get("total_seconds"):
         advisories.append(
             f"smoke wall: {base['total_seconds']:.1f}s -> "

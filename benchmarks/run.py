@@ -85,6 +85,9 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
                         lambda: bench_kernels.run(precision="bf16_f32acc"))
     serve = step("serve", lambda: bench_serve.run(loads=(1, 2, 8),
                                                   requests_per_client=6))
+    serve_append = step(
+        "serve_append",
+        lambda: bench_serve.run_append(n=800, batches=4, batch_rows=32))
 
     # achieved-vs-roofline per launch, pulled out of the kernel rows so the
     # perf trajectory is one flat section (and one CI artifact) per PR
@@ -116,6 +119,7 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
         "roofline": roofline,
         "cur_streaming_selection": cur_selection,
         "serve": serve,
+        "serve_append": serve_append,
     }
     out_dir = os.path.dirname(out)
     if out_dir:

@@ -1,9 +1,12 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     CheckpointCorruptionError,
     CheckpointManager,
+    committed_steps,
     gc_tmp,
     latest_step,
+    remove_step,
     restore,
     restore_tree,
     save,
+    step_leaf_paths,
 )

@@ -159,6 +159,39 @@ def _read_step_arrays(directory: str, step: int):
     return by_path
 
 
+def step_leaf_paths(directory: str, step: int) -> list:
+    """Sorted leaf paths of a committed step, from the manifest ALONE.
+
+    No array I/O: callers that only need to classify a step's KIND — a full
+    artifact snapshot (carries ``meta_json``) vs an incremental delta
+    (carries ``delta_json``, see ``repro.serve.incremental``) — peek here
+    before deciding how to restore.  A missing/truncated manifest is
+    classified as ``CheckpointCorruptionError`` like every other read."""
+    path = _step_dir(directory, step)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return sorted(str(m["path"]) for m in manifest.values())
+    except (OSError, ValueError, KeyError, TypeError,
+            json.JSONDecodeError) as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint step {step} at {path} has no readable manifest "
+            f"({type(e).__name__}: {e})") from e
+
+
+def committed_steps(directory: str) -> list:
+    """Public view of the junk-hardened committed-step listing (ascending).
+
+    The incremental delta-chain loader and its GC walk this instead of
+    re-implementing the tmp/stray-file/torn-dir filtering."""
+    return _committed_steps(directory)
+
+
+def remove_step(directory: str, step: int) -> None:
+    """Delete one committed step directory (delta GC / compaction)."""
+    shutil.rmtree(_step_dir(directory, step), ignore_errors=True)
+
+
 def restore(directory: str, step: int, like: Any) -> Any:
     """Load a checkpoint into the structure of ``like`` (shapes must match
     leaf-for-leaf; shardings are applied by the caller — elastic restore)."""

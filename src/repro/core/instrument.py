@@ -25,6 +25,13 @@ panels regardless of how ``jax.lax.scan`` re-executes the traced body):
                 the policy of the most recent launch and ``last_slab_mode``
                 whether a sharded claim used the scalar-prefetch slab
                 launch ('prefetch') or the gathered row copy ('gather')
+- ``append_sweeps`` : thin rectangular maintenance launches
+                (``append_cross``) from the incremental append-row path
+                (``repro.serve.incremental``) — metered separately from
+                query-side ``cross_sweeps`` so the serving invariant
+                (cross launches == query buckets) and the maintenance
+                invariant (ONE thin sweep per appended batch, O(b·c)
+                entries) are independently assertable
 - ``blocks`` / ``columns`` / ``diags`` / ``fulls`` : direct-access calls
 
 Used by the parity/entry-count tests (fast_model + streaming error must stay
@@ -50,7 +57,7 @@ class CountingOperator(SPSDOperator):
     def reset(self):
         self.counts = {"sweeps": 0, "panels": 0, "entries": 0,
                        "fused_sweeps": 0, "cross_sweeps": 0,
-                       "bf16_sweeps": 0,
+                       "append_sweeps": 0, "bf16_sweeps": 0,
                        "blocks": 0, "columns": 0, "diags": 0, "fulls": 0}
         self.last_route = None
         self.last_precision = None
@@ -60,6 +67,19 @@ class CountingOperator(SPSDOperator):
     @property
     def n(self) -> int:
         return self.inner.n
+
+    def rebind(self, inner: SPSDOperator) -> "CountingOperator":
+        """Swap the wrapped operator WITHOUT resetting the meters.
+
+        The incremental-maintenance path grows an operator's corpus between
+        rounds (appended rows); long-lived wrappers — a serving replica's
+        counter, the budget-regression harness — rebind to the grown
+        operator so cumulative counts stay comparable across the growth,
+        while every per-call count (``_count_sweep`` panels/entries,
+        ``cross``'s n_q·n) reads ``self.n`` at call time and therefore
+        tracks the live corpus automatically."""
+        self.inner = inner
+        return self
 
     # -- direct access (counted exactly) ------------------------------------
 
@@ -127,6 +147,20 @@ class CountingOperator(SPSDOperator):
         self.counts["cross_sweeps"] += 1
         self.counts["entries"] += int(Xq.shape[0]) * self.n
         out = self.inner.cross(Xq, Vs)
+        self._attribute(getattr(self.inner, "_last_sweep_route",
+                                "dense_rows"))
+        return out
+
+    def append_cross(self, Xq, Vs):
+        """The incremental append-row maintenance launch: same rectangular
+        shape as ``cross`` but metered as ``append_sweeps`` (not
+        ``cross_sweeps``), so the O(b·c) absorb claim — ONE thin sweep of
+        exactly n_new · n entries per appended batch, zero full sweeps — is
+        asserted independently of the query-side launch accounting."""
+        self.counts["append_sweeps"] += 1
+        self.counts["entries"] += int(Xq.shape[0]) * self.n
+        inner_call = getattr(self.inner, "append_cross", self.inner.cross)
+        out = inner_call(Xq, Vs)
         self._attribute(getattr(self.inner, "_last_sweep_route",
                                 "dense_rows"))
         return out

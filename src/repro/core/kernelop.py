@@ -288,13 +288,27 @@ class PairwiseKernel(SPSDOperator):
             self._l1_edges_cache = edges
         return self._l1_edges_cache
 
-    def l1_route(self) -> Optional[str]:
+    def l1_route(self, Xq=None) -> Optional[str]:
         """Which l1dist route this operator's launches take
         ('mxu_signsplit' | 'vpu_loop'; None for non-l1dist statistics) —
-        surfaced in bench metadata so perf regressions are attributable."""
+        surfaced in bench metadata so perf regressions are attributable.
+
+        With ``Xq`` given, reports the QUERY-side routing decision for a
+        ``cross(Xq, ...)`` launch: 'mxu_signsplit' only when a plan exists
+        AND every query value lies on the plan's lattice
+        (``signsplit.query_in_plan`` — the exactness contract for
+        out-of-sample points), 'vpu_loop' otherwise.  After a ``cross``
+        call the decision actually taken is recorded on
+        ``_last_cross_l1_route``."""
         if self.spec.stat != "l1dist":
             return None
-        return "mxu_signsplit" if self.l1_edges() is not None else "vpu_loop"
+        if self.l1_edges() is None:
+            return "vpu_loop"
+        if Xq is None:
+            return "mxu_signsplit"
+        from repro.kernels.pairwise import signsplit
+        return ("mxu_signsplit" if signsplit.query_in_plan(self.X, Xq)
+                else "vpu_loop")
 
     def block(self, row_idx, col_idx):
         Xr = jnp.take(self.X, row_idx, axis=0)
@@ -371,18 +385,35 @@ class PairwiseKernel(SPSDOperator):
         costs one evaluation of each cross-kernel entry.  The route — and
         the precision policy, as a ``+bf16_f32acc`` suffix — is recorded on
         ``_last_sweep_route`` like every sweep (``pallas_fused_rows`` /
-        ``dense_rows``).  The sign-split l1 route is NOT used here: its
-        exactness contract covers values of this operator's own X, and
-        query points are out-of-sample.
+        ``dense_rows``).
+
+        The sign-split l1 route IS used for on-lattice queries: the plan's
+        exactness contract covers out-of-sample points whose values all lie
+        on this operator's own per-feature value lattice
+        (``signsplit.query_in_plan`` — appended rows from the training
+        pipeline are the common case), in which case the launch takes the
+        MXU form (``+mxu_signsplit`` route suffix); off-lattice queries
+        keep the VPU reference loop.  The decision is recorded on
+        ``_last_cross_l1_route`` and queryable up front via
+        ``l1_route(Xq)``.
         """
         from repro.kernels.pairwise import ops as pw_ops
+        edges = None
+        self._last_cross_l1_route = None
+        if self.spec.stat == "l1dist":
+            q_route = self.l1_route(Xq)
+            self._last_cross_l1_route = q_route
+            if q_route == "mxu_signsplit":
+                edges = self.l1_edges()
         route = "pallas_fused_rows" if self.use_pallas else "dense_rows"
+        if edges is not None:
+            route += "+mxu_signsplit"
         if self.precision != "f32":
             route += "+" + self.precision
         self._last_sweep_route = route
         return pw_ops.kernel_matmat_multi_rows(
             self.spec, jnp.asarray(Xq), self.X, tuple(Vs),
-            use_pallas=self.use_pallas)
+            use_pallas=self.use_pallas, edges=edges)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -276,7 +276,6 @@ class UniformAdaptive2Policy(SelectionPolicy):
 
     def select(self, K, key, c, *, block_size=None, mesh=None, mask=None):
         Kop = as_operator(K)
-        n = Kop.n
         extra = c // (self.adaptive_rounds + 1)
         if extra == 0:
             # Silently degrading to pure uniform would break the declared
@@ -287,12 +286,20 @@ class UniformAdaptive2Policy(SelectionPolicy):
                 f"use selection='uniform' for smaller sketches")
         c0 = c - self.adaptive_rounds * extra
         keys = jax.random.split(key, self.adaptive_rounds + 1)
-        idx = _uniform_indices(keys[0], n, c0, mask)
-        valid = jnp.ones((n,), jnp.float32) if mask is None \
-            else mask.astype(jnp.float32)
+        idx = _uniform_indices(keys[0], Kop.n, c0, mask)
         for kk in keys[1:]:
             norms = residual_column_norms(Kop, idx, block_size=block_size,
                                           mesh=mesh, mask=mask)
+            # Size every per-round mask to the row count THIS round's sweep
+            # actually saw, not an n captured at entry: an incrementally
+            # maintained operator can grow between rounds (appended rows —
+            # repro.serve.incremental), and a stale n both hides the new
+            # rows from the adaptive draw and diverges from the norms'
+            # shape.  (``mask`` callers pad to a fixed n, so mask length
+            # always matches.)
+            n = int(norms.shape[0])
+            valid = jnp.ones((n,), jnp.float32) if mask is None \
+                else mask.astype(jnp.float32)
             selected = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
             new = _weighted_indices_without_replacement(
                 kk, norms, extra, valid * (1.0 - selected))

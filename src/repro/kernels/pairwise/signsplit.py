@@ -113,6 +113,34 @@ def build_plan(X, max_segments: int = MAX_SEGMENTS) -> Optional[SignSplitPlan]:
     return SignSplitPlan(edges=jnp.asarray(edges))
 
 
+def query_in_plan(X, Xq) -> bool:
+    """True iff every query value lies ON the plan data's lattice.
+
+    The sign-split identity drops the same-segment residual, and
+    ``build_plan`` places exactly one distinct data value of ``X`` in each
+    segment — so the MXU form is exact for a query point iff each of its
+    feature values EQUALS some realized value of that feature in ``X``
+    (then a same-segment pairing implies equal values, residual 0).  This
+    host-side membership check is what lets serving route ``cross`` through
+    the MXU for on-lattice queries — e.g. appended rows drawn from the same
+    categorical/quantized pipeline as the training data — while off-lattice
+    queries keep the always-exact VPU loop.  Tracers (jit-abstract queries)
+    and non-finite values are conservatively off-plan.
+    """
+    if isinstance(X, jax.core.Tracer) or isinstance(Xq, jax.core.Tracer):
+        return False
+    Xh = np.asarray(X, np.float32)
+    Qh = np.asarray(Xq, np.float32)
+    if Qh.ndim == 1:
+        Qh = Qh[None, :]
+    if Xh.ndim != 2 or Qh.ndim != 2 or Qh.shape[1] != Xh.shape[1]:
+        return False
+    if not np.all(np.isfinite(Qh)):
+        return False
+    return all(bool(np.isin(Qh[:, k], np.unique(Xh[:, k])).all())
+               for k in range(Xh.shape[1]))
+
+
 def embed(X: jnp.ndarray, edges: jnp.ndarray,
           compute_dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(α, β) sign-split embeddings, each (m, d·2B), from points (m, d).

@@ -21,6 +21,15 @@ requests are queued or the oldest has waited ``max_wait_s``, then flushes —
 request records its enqueue→complete latency; the CI serve-smoke job
 asserts the replayed trace matches the dense oracles to ≤1e-5 and that
 ``cross_sweeps`` (via ``CountingOperator``) equals ``buckets_served``.
+
+Corpus growth rides the same loop: ``submit_append`` enqueues a training
+batch next to the queries; the worker absorbs it IN ARRIVAL ORDER through
+an ``IncrementalMaintainer`` (one thin ``append_sweeps``-metered launch +
+delta checkpoint per batch, see ``repro.serve.incremental``) and swaps the
+refreshed artifact in for every later query — no rebuild, no restart.  The
+``--append`` CLI leg replays that path and asserts the absorb was O(b·c):
+exactly one append sweep per batch, zero panel/full sweeps, and ≤1e-5
+parity against a dense f64 oracle on the GROWN corpus.
 """
 from __future__ import annotations
 
@@ -36,15 +45,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as ckpt
 from repro.core.instrument import CountingOperator
 from repro.kernels.pairwise import specs as pw_specs
 from repro.serve import (
+    GenerationStats,
+    IncrementalMaintainer,
     KernelModelArtifact,
     QueryRequest,
+    StalenessPolicy,
     answer_batch,
     build_artifact,
     dense_krr_oracle,
     dense_oracle,
+    is_delta_step,
+    load_artifact,
     load_or_rebuild,
     parity_gap,
     plan_buckets,
@@ -71,15 +86,13 @@ class BatchPolicy:
     waste: float = 0.25
 
 
-class PendingQuery:
-    """Handle returned by ``KernelServer.submit``: ``wait()`` blocks until
-    the batching loop answers (or re-raises the flush error)."""
+class _Pending:
+    """Shared completion handle: ``wait()`` blocks until the batching loop
+    fills ``result`` (or re-raises the flush error)."""
 
-    __slots__ = ("request", "t_enqueue", "result", "latency_s", "error",
-                 "_done")
+    __slots__ = ("t_enqueue", "result", "latency_s", "error", "_done")
 
-    def __init__(self, request: QueryRequest):
-        self.request = request
+    def __init__(self):
         self.t_enqueue = time.perf_counter()
         self.result = None
         self.latency_s: Optional[float] = None
@@ -88,10 +101,36 @@ class PendingQuery:
 
     def wait(self, timeout: Optional[float] = None):
         if not self._done.wait(timeout):
-            raise TimeoutError("query not answered within timeout")
+            raise TimeoutError("request not answered within timeout")
         if self.error is not None:
             raise self.error
         return self.result
+
+
+class PendingQuery(_Pending):
+    """Handle returned by ``KernelServer.submit``; ``wait()`` returns the
+    ``QueryResult``."""
+
+    __slots__ = ("request",)
+
+    def __init__(self, request: QueryRequest):
+        super().__init__()
+        self.request = request
+
+
+class PendingAppend(_Pending):
+    """Handle returned by ``KernelServer.submit_append``; ``wait()`` returns
+    the ``GenerationStats`` of the absorbed batch.  Appends are absorbed in
+    ARRIVAL ORDER relative to each other and to queries in the same flush,
+    so a query submitted after an append is answered by the refreshed
+    artifact."""
+
+    __slots__ = ("X_new", "y_new")
+
+    def __init__(self, X_new, y_new):
+        super().__init__()
+        self.X_new = np.asarray(X_new, np.float32)
+        self.y_new = np.asarray(y_new, np.float32)
 
 
 class KernelServer:
@@ -104,17 +143,21 @@ class KernelServer:
     """
 
     def __init__(self, artifact: KernelModelArtifact,
-                 policy: BatchPolicy = BatchPolicy(), op=None):
+                 policy: BatchPolicy = BatchPolicy(), op=None,
+                 maintainer: Optional[IncrementalMaintainer] = None):
         self.artifact = artifact
         self.policy = policy
         self.op = artifact.landmark_operator() if op is None else op
+        self.maintainer = maintainer
         self._cv = threading.Condition()
-        self._queue: List[PendingQuery] = []
+        self._queue: List[_Pending] = []
         self._stopping = False
         self.buckets_served = 0
         self.batches_served = 0
         self.requests_served = 0
+        self.appends_served = 0
         self.latencies_s: List[float] = []
+        self.append_latencies_s: List[float] = []
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
 
@@ -122,7 +165,19 @@ class KernelServer:
 
     def submit(self, X, task: str = "krr") -> PendingQuery:
         req = X if isinstance(X, QueryRequest) else QueryRequest(X, task)
-        pending = PendingQuery(req)
+        return self._enqueue(PendingQuery(req))
+
+    def submit_append(self, X_new, y_new) -> PendingAppend:
+        """Enqueue a training batch for incremental absorption (requires a
+        ``maintainer``).  Absorbed in arrival order within the batching
+        loop; ``wait()`` returns the batch's ``GenerationStats``."""
+        if self.maintainer is None:
+            raise RuntimeError(
+                "KernelServer has no IncrementalMaintainer; construct with "
+                "maintainer= to accept appends")
+        return self._enqueue(PendingAppend(X_new, y_new))
+
+    def _enqueue(self, pending):
         with self._cv:
             if self._stopping:
                 raise RuntimeError("server is stopped")
@@ -166,12 +221,31 @@ class KernelServer:
                 self._flush(batch)
             except BaseException as e:                    # propagate to waiters
                 for p in batch:
-                    p.error = e
-                    p._done.set()
+                    if not p._done.is_set():
+                        p.error = e
+                        p._done.set()
 
-    def _flush(self, batch: List[PendingQuery]):
-        requests = [p.request for p in batch]
-        results = [None] * len(batch)
+    def _flush(self, batch: List[_Pending]):
+        """Process one collected batch IN ARRIVAL ORDER: maximal runs of
+        queries are bucketed and launched together; each append between
+        them is absorbed before the next run, so later queries see the
+        refreshed artifact."""
+        i = 0
+        while i < len(batch):
+            if isinstance(batch[i], PendingAppend):
+                self._absorb(batch[i])
+                i += 1
+                continue
+            j = i
+            while j < len(batch) and not isinstance(batch[j], PendingAppend):
+                j += 1
+            self._answer(batch[i:j])
+            i = j
+        self.batches_served += 1
+
+    def _answer(self, run: List[PendingQuery]):
+        requests = [p.request for p in run]
+        results = [None] * len(run)
         for bucket in plan_buckets(requests, waste=self.policy.waste):
             answers = answer_batch(
                 self.artifact, [requests[i] for i in bucket], op=self.op,
@@ -181,13 +255,29 @@ class KernelServer:
             for i, res in zip(bucket, answers):
                 results[i] = res
         now = time.perf_counter()
-        for p, res in zip(batch, results):
+        for p, res in zip(run, results):
             p.result = res
             p.latency_s = now - p.t_enqueue
             self.latencies_s.append(p.latency_s)
             self.requests_served += 1
             p._done.set()
-        self.batches_served += 1
+
+    def _absorb(self, p: PendingAppend):
+        old = self.artifact
+        stats: GenerationStats = self.maintainer.append(p.X_new, p.y_new)
+        art = self.maintainer.artifact
+        if art is not old:
+            # a re-sketch replaces the landmarks; the query op must follow
+            # (rebind keeps the meters running across the swap)
+            if art.X_landmarks is not old.X_landmarks and \
+                    hasattr(self.op, "rebind"):
+                self.op.rebind(art.landmark_operator())
+            self.artifact = art
+        p.result = stats
+        p.latency_s = time.perf_counter() - p.t_enqueue
+        self.append_latencies_s.append(p.latency_s)
+        self.appends_served += 1
+        p._done.set()
 
 
 def percentile_ms(latencies_s: Sequence[float], q: float) -> float:
@@ -206,6 +296,25 @@ def synth_problem(n: int, d: int, seed: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     w = rng.standard_normal((d,)).astype(np.float32)
     y = np.tanh(X @ w) + 0.1 * rng.standard_normal(n).astype(np.float32)
     return jnp.asarray(X), jnp.asarray(y, jnp.float32)
+
+
+def synth_batches(params: dict, batches: int, rows: int
+                  ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Append batches drawn from the SAME generative process as
+    ``synth_problem`` (same seed stream prefix, so the grown corpus is the
+    deterministic continuation of the base one)."""
+    n, d, seed = params["n"], params["d"], params["seed"]
+    rng = np.random.default_rng(seed)
+    rng.standard_normal((n, d))                      # replay the base X draw
+    w = rng.standard_normal((d,)).astype(np.float32)
+    rng.standard_normal(n)                           # ... and the base noise
+    out = []
+    for _ in range(batches):
+        Xb = rng.standard_normal((rows, d)).astype(np.float32)
+        yb = np.tanh(Xb @ w) + 0.1 * rng.standard_normal(rows).astype(
+            np.float32)
+        out.append((Xb, yb))
+    return out
 
 
 def build_from_params(params: dict) -> KernelModelArtifact:
@@ -304,15 +413,46 @@ def _serve(args) -> int:
         print("FAIL: --require-warm but boot was cold")
         return 1
 
+    if args.append_batches > 0 and int(artifact.C.shape[0]) != params["n"]:
+        # A previous append run left a delta chain on the store, so the
+        # warm boot restored the grown chain tip — but the canned trace and
+        # the synth base (X, y) describe the BASE corpus.  Restart the leg
+        # from the latest FULL snapshot and drop the prior run's deltas:
+        # the leg replays a deterministic append stream, so reruns are
+        # idempotent instead of chaining deltas onto a stale tip.
+        steps = ckpt.committed_steps(args.dir)
+        fulls = [s for s in steps if not is_delta_step(args.dir, s)]
+        if fulls:
+            artifact = load_artifact(args.dir, step=max(fulls))
+            for s in steps:
+                if s > max(fulls):
+                    ckpt.remove_step(args.dir, s)
+            print(f"append leg: rebased on full step {max(fulls)} "
+                  f"(dropped {len(steps) - len(fulls)} prior delta step(s))")
+
     op = CountingOperator(artifact.landmark_operator())
     policy = BatchPolicy(max_batch=args.max_batch,
                          max_wait_s=args.max_wait_ms / 1e3)
-    server = KernelServer(artifact, policy, op=op)
+    maintainer = None
+    if args.append_batches > 0:
+        X_base, y_base = synth_problem(params["n"], params["d"],
+                                       params["seed"])
+        maintainer = IncrementalMaintainer(
+            artifact, np.asarray(y_base), directory=args.dir,
+            X=np.asarray(X_base),
+            staleness=StalenessPolicy(
+                drift_threshold=args.drift_threshold,
+                error_budget=float("inf"), max_generations=0),
+            op=op)
+    server = KernelServer(artifact, policy, op=op, maintainer=maintainer)
     trace = load_trace(args.dir)
     try:
         gap_warmup, _ = replay_trace(server, trace)       # compile caches
         sweeps0, buckets0 = op.counts["cross_sweeps"], server.buckets_served
         gap, lats = replay_trace(server, trace)
+        append_ok = True
+        if args.append_batches > 0:
+            append_ok = _append_leg(args, params, server, op)
     finally:
         server.stop()
 
@@ -325,7 +465,7 @@ def _serve(args) -> int:
           f"(route: {op.last_route})")
     print(f"latency: p50 {p50:.2f} ms  p99 {p99:.2f} ms")
 
-    ok = True
+    ok = append_ok
     if gap > args.parity_tol or gap_warmup > args.parity_tol:
         print(f"FAIL: parity {max(gap, gap_warmup):.3e} > "
               f"tol {args.parity_tol:.1e}")
@@ -339,6 +479,83 @@ def _serve(args) -> int:
         ok = False
     print("serve ok" if ok else "serve FAILED")
     return 0 if ok else 1
+
+
+def _append_leg(args, params: dict, server: KernelServer,
+                op: CountingOperator) -> bool:
+    """The append-refresh replay: absorb batches through the live server,
+    then hold the absorb to the O(b·c) meter contract and the grown-corpus
+    parity contract."""
+    batches = synth_batches(params, args.append_batches, args.append_rows)
+    before = dict(op.counts)
+    n_before = int(server.artifact.C.shape[0])
+
+    pending = [server.submit_append(Xb, yb) for Xb, yb in batches]
+    stats = [p.wait(timeout=60.0) for p in pending]
+    gens = [s.generation for s in stats]
+    app_p50 = percentile_ms([p.latency_s for p in pending], 50)
+    print(f"append: absorbed {len(batches)} x {args.append_rows} rows "
+          f"(n {n_before} -> {stats[-1].n_after}), p50 {app_p50:.2f} ms, "
+          f"drift {stats[-1].drift:.3f}")
+
+    ok = True
+    # the O(b·c) contract: ONE thin metered launch per batch, nothing else
+    deltas = {k: op.counts[k] - before.get(k, 0)
+              for k in ("append_sweeps", "sweeps", "fulls", "cross_sweeps")}
+    if deltas["append_sweeps"] != len(batches):
+        print(f"FAIL: {deltas['append_sweeps']} append sweeps for "
+              f"{len(batches)} batches (must be exactly one per batch)")
+        ok = False
+    if deltas["sweeps"] or deltas["fulls"] or deltas["cross_sweeps"]:
+        print(f"FAIL: absorb touched the kernel beyond the thin launch "
+              f"(sweeps={deltas['sweeps']} fulls={deltas['fulls']} "
+              f"cross={deltas['cross_sweeps']})")
+        ok = False
+    if gens != list(range(gens[0], gens[0] + len(batches))):
+        print(f"FAIL: generations {gens} not consecutive in arrival order")
+        ok = False
+
+    # grown-corpus parity: fresh queries vs a dense f64 oracle over the
+    # artifact as it NOW stands (base + every appended row)
+    rng = np.random.default_rng(params["seed"] + 2)
+    _, y_base = synth_problem(params["n"], params["d"], params["seed"])
+    y_full = np.concatenate([np.asarray(y_base)[:, None]]
+                            + [yb[:, None] for _, yb in batches], axis=0)
+    art = server.artifact
+    gaps = []
+    for nq in (5, 17, 33):
+        Xq = rng.standard_normal((nq, params["d"])).astype(np.float32)
+        expected = dense_krr_oracle(art, jnp.asarray(Xq),
+                                    jnp.asarray(y_full, jnp.float32))
+        res = server.submit(Xq, "krr").wait(timeout=60.0)
+        gaps.append(float(parity_gap(res.out, expected)))
+        for task in ("kpca", "features"):
+            expected = dense_oracle(art, jnp.asarray(Xq), task)
+            res = server.submit(Xq, task).wait(timeout=60.0)
+            gaps.append(float(parity_gap(res.out, expected)))
+    gap = max(gaps)
+    print(f"append: grown-corpus parity {gap:.3e} over {len(gaps)} probes")
+    if gap > args.parity_tol:
+        print(f"FAIL: grown-corpus parity {gap:.3e} > "
+              f"tol {args.parity_tol:.1e}")
+        ok = False
+
+    # persistence: every generation is a committed delta step, and a fresh
+    # chain restore reproduces the LIVE artifact bitwise
+    steps = ckpt.committed_steps(args.dir)
+    if len(steps) < 1 + len(batches):
+        print(f"FAIL: expected >= {1 + len(batches)} committed steps "
+              f"(base + one delta per batch), found {steps}")
+        ok = False
+    restored = load_artifact(args.dir)
+    if restored is None or \
+            not np.array_equal(np.asarray(restored.C), np.asarray(art.C)) or \
+            not np.array_equal(np.asarray(restored.heads["krr"]),
+                               np.asarray(art.heads["krr"])):
+        print("FAIL: delta-chain restore does not reproduce the live "
+              "artifact bitwise")
+        ok = False
+    return ok
 
 
 def main(argv=None) -> int:
@@ -368,6 +585,16 @@ def main(argv=None) -> int:
     p.add_argument("--max-p50-ms", type=float, default=None)
     p.add_argument("--max-batch", type=int, default=32)
     p.add_argument("--max-wait-ms", type=float, default=5.0)
+    # incremental-append leg (serve side)
+    p.add_argument("--append-batches", type=int, default=0,
+                   help="absorb this many appended-row batches through the "
+                        "live server and assert the O(b*c) meter + "
+                        "grown-corpus parity contracts")
+    p.add_argument("--append-rows", type=int, default=16,
+                   help="rows per appended batch")
+    p.add_argument("--drift-threshold", type=float, default=float("inf"),
+                   help="staleness drift threshold for the append leg "
+                        "(default: never re-sketch)")
     args = p.parse_args(argv)
 
     if args.build == args.serve:

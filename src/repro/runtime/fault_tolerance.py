@@ -136,9 +136,22 @@ class StragglerDetector:
 # recompute-on-corruption (serving warm boot)
 # ---------------------------------------------------------------------------
 
+class ArtifactStaleError(RuntimeError):
+    """A stored/served artifact is VALID but no longer trustworthy.
+
+    Raised by the incremental-maintenance staleness policy
+    (``repro.serve.incremental.StalenessPolicy``) when the tracked
+    per-generation error estimate drifts past its threshold: the factor
+    store decodes fine, but the model it encodes has fallen behind the
+    grown corpus.  ``ArtifactRecovery`` treats it like corruption — rebuild
+    from source, persist, keep serving — but records the distinct 'stale'
+    event kind so re-sketches are attributable separately from damage.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class RecoveryEvent:
-    kind: str                        # 'restored' | 'missing' | 'corrupt' | 'rebuilt'
+    kind: str           # 'restored' | 'missing' | 'corrupt' | 'stale' | 'rebuilt'
     detail: str = ""
 
 
@@ -151,14 +164,18 @@ class ArtifactRecovery:
     correct reaction is to recompute the artifact from source and persist a
     fresh copy.  ``run`` encodes that policy; every decision lands in
     ``events`` so tests (and the serve-smoke CI job) can assert whether a
-    boot was warm (``restored``) or cold (``missing``/``corrupt`` →
-    ``rebuilt``).  Like the rest of this module the logic is deterministic
-    and injectable: what counts as corruption is the ``corruption_types``
-    tuple (``checkpoint.CheckpointCorruptionError`` in production).
+    boot was warm (``restored``) or cold (``missing``/``corrupt``/``stale``
+    → ``rebuilt``).  Like the rest of this module the logic is
+    deterministic and injectable: what counts as corruption is the
+    ``corruption_types`` tuple (``checkpoint.CheckpointCorruptionError`` in
+    production), and ``stale_types`` (``ArtifactStaleError``) marks
+    drift-triggered full re-sketches — same rebuild path, distinct event.
     """
 
-    def __init__(self, corruption_types: Tuple[type, ...] = (RuntimeError,)):
+    def __init__(self, corruption_types: Tuple[type, ...] = (RuntimeError,),
+                 stale_types: Tuple[type, ...] = (ArtifactStaleError,)):
         self.corruption_types = corruption_types
+        self.stale_types = stale_types
         self.events: List[RecoveryEvent] = []
 
     @property
@@ -169,10 +186,14 @@ class ArtifactRecovery:
     def run(self, load: Callable[[], object], rebuild: Callable[[], object],
             save: Optional[Callable[[object], None]] = None):
         """``load()`` (returning None when nothing is stored), falling back
-        to ``rebuild()`` on a missing or corrupt store; ``save`` persists the
-        rebuilt artifact so the NEXT boot is warm again."""
+        to ``rebuild()`` on a missing, corrupt, or stale store; ``save``
+        persists the rebuilt artifact so the NEXT boot is warm again."""
         try:
             out = load()
+        except self.stale_types as e:
+            self.events.append(RecoveryEvent(
+                "stale", f"{type(e).__name__}: {e}"))
+            out = None
         except self.corruption_types as e:
             self.events.append(RecoveryEvent(
                 "corrupt", f"{type(e).__name__}: {e}"))

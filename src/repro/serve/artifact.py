@@ -275,12 +275,22 @@ def save_artifact(directory: str, artifact: KernelModelArtifact,
 def load_artifact(directory: str,
                   step: Optional[int] = None) -> Optional[KernelModelArtifact]:
     """Latest (or pinned) committed artifact, or None when none exists.
-    File-level damage raises ``CheckpointCorruptionError`` — callers that
-    must keep serving go through ``load_or_rebuild`` instead."""
+
+    Delta-chain aware: when the target step is an incremental refresh
+    generation (``delta_json`` leaf, see ``repro.serve.incremental``), the
+    chain is replayed onto its base snapshot — a warm boot lands on the
+    LIVE grown artifact, not the last full rebuild.  File-level damage and
+    broken chains raise ``CheckpointCorruptionError`` — callers that must
+    keep serving go through ``load_or_rebuild`` instead."""
     if step is None:
         step = ckpt.latest_step(directory)
         if step is None:
             return None
+    # peek the step KIND from the manifest alone before choosing a decoder
+    # (a delta tree has no meta_json leaf and would mis-classify as corrupt)
+    if "delta_json" in ckpt.step_leaf_paths(directory, step):
+        from repro.serve import incremental
+        return incremental.load_artifact_chain(directory, step)
     tree = ckpt.restore_tree(directory, step)
     try:
         return artifact_from_tree(tree)

@@ -1,0 +1,400 @@
+"""Incremental artifact maintenance (repro.serve.incremental): append-row
+absorbs metered to ONE thin launch, grown-corpus parity vs dense f64
+oracles, delta-checkpoint round trips (bitwise), GC of superseded deltas
+under the junk-entry hardening, corrupt-delta classification, and the
+staleness-triggered re-sketch through ArtifactRecovery."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core.instrument import CountingOperator
+from repro.kernels.pairwise import specs as pw_specs
+from repro.launch.serve_kernel import BatchPolicy, KernelServer
+from repro.runtime.fault_tolerance import ArtifactRecovery, ArtifactStaleError
+from repro.serve import (
+    IncrementalMaintainer,
+    StalenessPolicy,
+    append_rows,
+    build_artifact,
+    compact,
+    dense_krr_oracle,
+    dense_oracle,
+    gc_superseded_deltas,
+    init_state,
+    is_delta_step,
+    load_artifact,
+    load_chain,
+    parity_gap,
+    save_artifact,
+    save_delta,
+)
+
+N, D, C, S = 240, 4, 32, 64
+B = 16          # appended rows per batch
+
+
+def _problem(seed=0, n=N, d=D):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    w = rng.standard_normal((d,)).astype(np.float32)
+    y = np.tanh(X @ w)
+    return X, y, w, rng
+
+
+@pytest.fixture(scope="module")
+def built():
+    X, y, w, _ = _problem()
+    spec = pw_specs.get_spec("rbf", sigma=3.0)   # smooth -> low drift
+    art = build_artifact(jnp.asarray(X), jnp.asarray(y, jnp.float32), spec,
+                         c=C, s=S, alpha=1.0, key=jax.random.PRNGKey(0))
+    return art, X, y, w, spec
+
+
+def _batches(w, rng, count, rows=B, d=D):
+    out = []
+    for _ in range(count):
+        Xb = rng.standard_normal((rows, d)).astype(np.float32)
+        out.append((Xb, np.tanh(Xb @ w)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the absorb: metering + parity
+# ---------------------------------------------------------------------------
+
+def test_append_is_one_thin_metered_launch(built):
+    art, X, y, w, spec = built
+    state = init_state(art, y)
+    op = CountingOperator(art.landmark_operator())
+    _, rng = None, np.random.default_rng(1)
+    for i, (Xb, yb) in enumerate(_batches(w, rng, 3)):
+        art, state, stats, _ = append_rows(art, state, Xb, yb, op=op)
+        assert stats.generation == i + 1
+        assert stats.n_after == N + (i + 1) * B
+        assert op.counts["append_sweeps"] == i + 1
+    # O(b·c): thin launches only — nothing else touched the kernel
+    assert op.counts["sweeps"] == 0
+    assert op.counts["fulls"] == 0
+    assert op.counts["cross_sweeps"] == 0
+    assert op.counts["columns"] == 0
+    assert op.counts["entries"] == 3 * B * C
+
+
+def test_grown_corpus_parity_vs_dense_oracles():
+    # Serve-convention shapes (d=24, sigma=1): the dense oracle re-solves the
+    # n-sized system from the f32-cast artifact.U, so the module fixture's
+    # smooth sigma=3/d=4 kernel (near-singular, ‖K̂‖≈n) amplifies that cast
+    # to ~1e-5 before any append happens — a well-conditioned spec isolates
+    # the incremental path itself.
+    dq = 24
+    X, y, w, _ = _problem(seed=11, d=dq)
+    spec = pw_specs.get_spec("rbf", sigma=1.0)
+    art = build_artifact(jnp.asarray(X), jnp.asarray(y, jnp.float32), spec,
+                         c=C, s=S, alpha=1.0, key=jax.random.PRNGKey(0))
+    state = init_state(art, y)
+    rng = np.random.default_rng(2)
+    ys = [y[:, None]]
+    for Xb, yb in _batches(w, rng, 3, d=dq):
+        art, state, _, _ = append_rows(art, state, Xb, yb)
+        ys.append(yb[:, None])
+    y_full = np.concatenate(ys, axis=0)
+    assert int(art.C.shape[0]) == y_full.shape[0]
+
+    qop = art.landmark_operator()
+    Xq = jnp.asarray(rng.standard_normal((19, dq)).astype(np.float32))
+    # KRR: the refreshed head must match an INDEPENDENT dense f64 solve of
+    # the grown system (C' U' C'ᵀ + αI) w = y_full
+    expected = dense_krr_oracle(art, Xq, jnp.asarray(y_full, jnp.float32))
+    (got,) = qop.cross(Xq, (art.heads["krr"],))
+    assert parity_gap(got, expected) <= 1e-5
+    # KPCA / features: refreshed heads must agree with the dense route over
+    # the refreshed factors
+    for task in ("kpca", "features"):
+        expected = dense_oracle(art, Xq, task)
+        (got,) = qop.cross(Xq, (art.heads[task],))
+        assert parity_gap(got, expected) <= 1e-4
+
+
+def test_no_build_artifact_rerun_and_c_grows_by_stacking(built):
+    art, X, y, w, spec = built
+    state = init_state(art, y)
+    rng = np.random.default_rng(3)
+    (Xb, yb), = _batches(w, rng, 1)
+    art2, state2, stats, delta = append_rows(art, state, Xb, yb)
+    # base rows of C are untouched (no recompute of the n-sized factor) and
+    # the landmarks/selection are carried over unchanged
+    assert np.array_equal(np.asarray(art2.C[:N]), np.asarray(art.C))
+    assert art2.X_landmarks is art.X_landmarks
+    assert np.array_equal(np.asarray(art2.C[N:]), np.asarray(delta.G))
+    assert state2.n == N + B and stats.batch_rows == B
+
+
+def test_drift_signal_discriminates(built):
+    art, X, y, w, spec = built
+    state = init_state(art, y)
+    rng = np.random.default_rng(4)
+    (Xb, yb), = _batches(w, rng, 1)
+    _, _, stats_in, _ = append_rows(art, state, Xb, yb)
+    assert stats_in.drift < 0.05
+    X_ood = 10.0 + rng.standard_normal((B, D)).astype(np.float32)
+    _, _, stats_ood, _ = append_rows(art, init_state(art, y), X_ood,
+                                     np.zeros(B, np.float32))
+    assert stats_ood.drift > 5 * stats_in.drift
+
+
+def test_staleness_policy_thresholds():
+    pol = StalenessPolicy(drift_threshold=0.3, error_budget=0.4,
+                          max_generations=5)
+    from repro.serve import GenerationStats
+
+    def stats(**kw):
+        base = dict(generation=1, n_before=10, batch_rows=2, n_after=12,
+                    drift=0.0, error_est=0.0)
+        base.update(kw)
+        return GenerationStats(**base)
+
+    assert pol.should_resketch(stats()) is None
+    assert "drift" in pol.should_resketch(stats(drift=0.31))
+    assert "error" in pol.should_resketch(stats(error_est=0.5))
+    assert "generation" in pol.should_resketch(stats(generation=5))
+
+
+# ---------------------------------------------------------------------------
+# delta checkpoints: round trip, chain validation, GC, corruption
+# ---------------------------------------------------------------------------
+
+def test_delta_chain_roundtrip_is_bitwise(built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    save_artifact(d, art, step=0)
+    m = IncrementalMaintainer(art, y, directory=d, X=X)
+    rng = np.random.default_rng(5)
+    for Xb, yb in _batches(w, rng, 3):
+        m.append(Xb, yb)
+    steps = ckpt.committed_steps(d)
+    assert steps == [0, 1, 2, 3]
+    assert [is_delta_step(d, s) for s in steps] == [False, True, True, True]
+
+    restored = load_artifact(d)
+    live = m.artifact
+    for f in ("C", "U", "woodbury_M", "kpca_eigvals"):
+        a, b = np.asarray(getattr(restored, f)), np.asarray(getattr(live, f))
+        assert a.dtype == b.dtype and np.array_equal(a, b), f
+    for t in ("krr", "kpca", "features"):
+        assert np.array_equal(np.asarray(restored.heads[t]),
+                              np.asarray(live.heads[t])), t
+    # bitwise factors + heads => bitwise predictions
+    Xq = jnp.asarray(rng.standard_normal((9, D)).astype(np.float32))
+    (p1,) = restored.landmark_operator().cross(Xq, (restored.heads["krr"],))
+    (p2,) = live.landmark_operator().cross(Xq, (live.heads["krr"],))
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_mid_chain_restore_and_generation_gap_is_corruption(built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    save_artifact(d, art, step=0)
+    m = IncrementalMaintainer(art, y, directory=d, X=X)
+    rng = np.random.default_rng(6)
+    for Xb, yb in _batches(w, rng, 3):
+        m.append(Xb, yb)
+    mid, chain = load_chain(d, 2)
+    assert int(mid.C.shape[0]) == N + 2 * B and len(chain) == 2
+    # delete a middle link: the chain above it must be unreadable
+    ckpt.remove_step(d, 2)
+    with pytest.raises(ckpt.CheckpointCorruptionError):
+        load_chain(d, 3)
+
+
+def test_corrupt_delta_is_corruption_and_rebuild_path_recovers(
+        built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    save_artifact(d, art, step=0)
+    m = IncrementalMaintainer(art, y, directory=d, X=X)
+    rng = np.random.default_rng(7)
+    (Xb, yb), = _batches(w, rng, 1)
+    m.append(Xb, yb)
+    # truncate the delta's manifest -> file-level damage
+    with open(os.path.join(d, "step_000000001", "manifest.json"), "w") as f:
+        f.write('{"leaf_00000": {"pa')
+    with pytest.raises(ckpt.CheckpointCorruptionError):
+        load_artifact(d)
+    # load_or_rebuild turns that into a rebuild-from-source, not a crash
+    from repro.serve import load_or_rebuild
+    out, recovery = load_or_rebuild(d, lambda: art)
+    assert [e.kind for e in recovery.events] == ["corrupt", "rebuilt"]
+
+
+def test_undecodable_delta_tree_is_corruption(built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    # a committed step that LOOKS like a delta (delta_json leaf) but whose
+    # payload is garbage must classify as corruption, not KeyError
+    ckpt.save(d, 0, artifact_to_tree_ok := {"delta_json": "not json {"})
+    assert is_delta_step(d, 0)
+    with pytest.raises(ckpt.CheckpointCorruptionError):
+        load_chain(d, 0)
+
+
+def test_gc_superseded_deltas_under_junk_hardening(built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    save_artifact(d, art, step=0)
+    m = IncrementalMaintainer(art, y, directory=d, X=X)
+    rng = np.random.default_rng(8)
+    for Xb, yb in _batches(w, rng, 2):
+        m.append(Xb, yb)
+    # junk the store the way crashes do: stray file, tmp dir, manifest-less
+    # dir, torn manifest — GC must skip them all without crashing
+    open(os.path.join(d, "step_junk"), "w").close()
+    os.makedirs(os.path.join(d, "step_000000077.tmp"))
+    os.makedirs(os.path.join(d, "step_000000088"))
+    os.makedirs(os.path.join(d, "step_000000099"))
+    with open(os.path.join(d, "step_000000099", "manifest.json"), "w") as f:
+        f.write('{"truncat')
+
+    # nothing superseded yet: the only full snapshot predates the deltas
+    assert gc_superseded_deltas(d) == 0
+    assert is_delta_step(d, 1) and is_delta_step(d, 2)
+
+    # compact -> a newer full snapshot supersedes the chain
+    step = compact(d, m.artifact)
+    steps = ckpt.committed_steps(d)
+    assert step in steps and not is_delta_step(d, step)
+    assert 1 not in steps and 2 not in steps      # deltas GC'd
+    # junk untouched, restore still lands on the live artifact
+    assert os.path.exists(os.path.join(d, "step_junk"))
+    restored = load_artifact(d)
+    assert np.array_equal(np.asarray(restored.C), np.asarray(m.artifact.C))
+
+
+def test_gc_keeps_deltas_based_on_latest_full(built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    save_artifact(d, art, step=0)
+    m = IncrementalMaintainer(art, y, directory=d, X=X)
+    rng = np.random.default_rng(9)
+    (Xb, yb), = _batches(w, rng, 1)
+    m.append(Xb, yb)
+    base = compact(d, m.artifact)                  # new base, old delta GC'd
+    m.base_step = base
+    m.state = init_state(m.artifact, m.y_full())
+    (Xb, yb), = _batches(w, rng, 1)
+    m.append(Xb, yb)                               # delta on the NEW base
+    assert gc_superseded_deltas(d) == 0            # current chain survives
+    assert is_delta_step(d, base + 1)
+
+
+# ---------------------------------------------------------------------------
+# staleness -> re-sketch through ArtifactRecovery
+# ---------------------------------------------------------------------------
+
+def test_stale_error_routes_to_stale_event():
+    rec = ArtifactRecovery(stale_types=(ArtifactStaleError,))
+
+    def load():
+        raise ArtifactStaleError("generation 3: drift 0.9 > 0.5")
+
+    out = rec.run(load=load, rebuild=lambda: "fresh")
+    assert out == "fresh"
+    assert [e.kind for e in rec.events] == ["stale", "rebuilt"]
+
+
+def test_maintainer_resketch_compacts_and_continues(built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    save_artifact(d, art, step=0)
+    rebuilds = []
+
+    def rebuild_fn(Xf, yf):
+        rebuilds.append(int(Xf.shape[0]))
+        return build_artifact(jnp.asarray(Xf), jnp.asarray(yf, jnp.float32),
+                              spec, c=C, s=S, alpha=1.0,
+                              key=jax.random.PRNGKey(1))
+
+    op = CountingOperator(art.landmark_operator())
+    m = IncrementalMaintainer(
+        art, y, directory=d, X=X,
+        staleness=StalenessPolicy(drift_threshold=0.3),
+        rebuild_fn=rebuild_fn, op=op)
+    rng = np.random.default_rng(10)
+    (Xb, yb), = _batches(w, rng, 1)
+    stats = m.append(Xb, yb)
+    assert not stats.resketch
+
+    X_ood = 10.0 + rng.standard_normal((B, D)).astype(np.float32)
+    stats = m.append(X_ood, np.zeros(B, np.float32))
+    assert stats.resketch and "drift" in stats.resketch_reason
+    assert rebuilds == [N + 2 * B]
+    assert [e.kind for e in m.recovery.events] == ["stale", "rebuilt"]
+    # compacted: no deltas remain, the new base is the grown full snapshot
+    steps = ckpt.committed_steps(d)
+    assert not any(is_delta_step(d, s) for s in steps)
+    assert int(load_artifact(d).C.shape[0]) == N + 2 * B
+    # the metered operator was rebound to the NEW landmarks and appends
+    # continue as generation 1 of the new base
+    (Xb, yb), = _batches(w, rng, 1)
+    stats = m.append(Xb, yb)
+    assert stats.generation == 1 and not stats.resketch
+    assert op.counts["append_sweeps"] == 3         # cumulative across rebind
+    assert int(load_artifact(d).C.shape[0]) == N + 3 * B
+
+
+# ---------------------------------------------------------------------------
+# server integration: appends through the continuous-batching loop
+# ---------------------------------------------------------------------------
+
+def test_server_absorbs_appends_in_order_and_serves_grown(built, tmp_path):
+    art, X, y, w, spec = built
+    d = str(tmp_path)
+    save_artifact(d, art, step=0)
+    op = CountingOperator(art.landmark_operator())
+    m = IncrementalMaintainer(art, y, directory=d, X=X, op=op)
+    server = KernelServer(art, BatchPolicy(max_wait_s=0.005), op=op,
+                          maintainer=m)
+    rng = np.random.default_rng(11)
+    try:
+        batches = _batches(w, rng, 3)
+        pending = [server.submit_append(Xb, yb) for Xb, yb in batches]
+        stats = [p.wait(timeout=60.0) for p in pending]
+        assert [s.generation for s in stats] == [1, 2, 3]
+        assert server.appends_served == 3
+        assert op.counts["append_sweeps"] == 3
+
+        # the server now answers from the refreshed artifact
+        assert int(server.artifact.C.shape[0]) == N + 3 * B
+        y_full = np.concatenate([y[:, None]]
+                                + [yb[:, None] for _, yb in batches], axis=0)
+        Xq = rng.standard_normal((11, D)).astype(np.float32)
+        expected = dense_krr_oracle(server.artifact, jnp.asarray(Xq),
+                                    jnp.asarray(y_full, jnp.float32))
+        res = server.submit(Xq, "krr").wait(timeout=60.0)
+        # 1e-4, not 1e-5: the module fixture's smooth sigma=3/d=4 kernel
+        # amplifies the oracle's f32 U cast to ~1e-5 on the BASE build
+        # already; the strict 1e-5 grown-corpus gate runs on the
+        # well-conditioned spec in
+        # test_grown_corpus_parity_vs_dense_oracles and in the CI
+        # serve-smoke append leg.
+        assert parity_gap(res.out, expected) <= 1e-4
+    finally:
+        server.stop()
+    # and the delta chain persisted every generation
+    assert int(load_artifact(d).C.shape[0]) == N + 3 * B
+
+
+def test_server_submit_append_requires_maintainer(built):
+    art, *_ = built
+    server = KernelServer(art, BatchPolicy(max_wait_s=0.005))
+    try:
+        with pytest.raises(RuntimeError, match="maintainer"):
+            server.submit_append(np.zeros((2, D), np.float32),
+                                 np.zeros(2, np.float32))
+    finally:
+        server.stop()

@@ -100,6 +100,44 @@ def test_policies_respect_mask(name):
     assert len(set(idx.tolist())) == 12
 
 
+def test_adaptive2_sees_rows_appended_between_rounds():
+    """Regression: the incremental maintainer can grow an operator's n
+    between uniform_adaptive2's rounds (append_rows rebinding the live
+    operator).  The policy used to size per-round masks from an n captured
+    at entry — a broadcast crash against the grown round's norms, and the
+    appended rows were invisible to the adaptive draw.  Budgets must hold
+    unchanged: growth adds rows, never kernel passes."""
+    X_full = np.array(_clustered(12, n=320))
+    n0, grow, c = 200, 60, 24
+    spec = pw_specs.suggested_spec("rbf", X_full.shape[1])
+
+    class Growing(CountingOperator):
+        def __init__(self):
+            self.live_n = n0
+            super().__init__(PairwiseKernel(
+                jnp.asarray(X_full[:n0], jnp.float32), spec,
+                use_pallas=False))
+
+        def sweep(self, plans, block_size=None, mesh=None):
+            out = super().sweep(plans, block_size=block_size, mesh=mesh)
+            self.live_n = min(self.live_n + grow, X_full.shape[0])
+            self.rebind(PairwiseKernel(
+                jnp.asarray(X_full[:self.live_n], jnp.float32), spec,
+                use_pallas=False))
+            return out
+
+    op = Growing()
+    pol = selection.get_policy("uniform_adaptive2")
+    idx = np.asarray(pol.select(op, jax.random.PRNGKey(3), c))
+    assert op.live_n == n0 + pol.adaptive_rounds * grow   # growth happened
+    assert len(set(idx.tolist())) == c
+    assert idx.max() < op.live_n
+    # rows appended after entry are eligible for the adaptive draws
+    assert idx.max() >= n0, idx
+    assert op.counts["sweeps"] == pol.sweep_budget()
+    assert op.counts["fulls"] == 0
+
+
 def test_leverage_pilot_clamps_to_valid_rows():
     """Regression: a pilot wider than the valid-row count must clamp instead
     of silently pulling zero-probability padding columns into the panel

@@ -155,6 +155,96 @@ def test_laplacian_full_parity_across_routes():
 
 
 # ---------------------------------------------------------------------------
+# query-side routing: cross() takes the MXU form for on-lattice queries
+# ---------------------------------------------------------------------------
+
+def _on_lattice_queries(X, m, seed):
+    """Out-of-sample rows whose every feature value is drawn from the
+    realized per-feature values of ``X`` — on-lattice by construction."""
+    rng = np.random.default_rng(seed)
+    Xh = np.asarray(X)
+    cols = [rng.choice(np.unique(Xh[:, k]), size=m)
+            for k in range(Xh.shape[1])]
+    return jnp.asarray(np.stack(cols, axis=1), jnp.float32)
+
+
+def test_query_in_plan_membership():
+    X = _quantized(20, 120, d=6)
+    assert signsplit.query_in_plan(X, _on_lattice_queries(X, 9, 21))
+    cont = np.random.default_rng(22).normal(size=(9, 6)).astype(np.float32)
+    assert not signsplit.query_in_plan(X, cont)
+    # one off-lattice value in one feature poisons the whole batch
+    almost = np.asarray(_on_lattice_queries(X, 9, 23)).copy()
+    almost[3, 2] += 1e-3
+    assert not signsplit.query_in_plan(X, almost)
+    # shape mismatch / non-finite values are conservatively off-plan
+    assert not signsplit.query_in_plan(X, np.zeros((4, 5), np.float32))
+    bad = np.asarray(_on_lattice_queries(X, 4, 24)).copy()
+    bad[0, 0] = np.nan
+    assert not signsplit.query_in_plan(X, bad)
+    # tracers (jit-abstract queries) are off-plan, never an error
+    seen = []
+
+    @jax.jit
+    def f(q):
+        seen.append(signsplit.query_in_plan(X, q))
+        return q
+
+    f(_on_lattice_queries(X, 4, 25))
+    assert seen == [False]
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_cross_mxu_route_for_on_lattice_queries_is_exact(use_pallas):
+    """On-lattice queries route through the sign-split MXU form and must
+    reproduce the f64 l1 oracle — the exactness contract that justifies
+    the routing."""
+    spec = specs.suggested_spec("laplacian", 8)
+    X = _quantized(26, 140)
+    op = PairwiseKernel(X, spec, use_pallas=use_pallas)
+    assert op.l1_edges() is not None
+    Xq = _on_lattice_queries(X, 33, 27)
+    assert op.l1_route(Xq) == "mxu_signsplit"
+    V = jnp.asarray(np.random.default_rng(28).normal(size=(140, 5)),
+                    jnp.float32)
+    (got,) = op.cross(Xq, (V,))
+    assert op._last_cross_l1_route == "mxu_signsplit"
+    assert "+mxu_signsplit" in op._last_sweep_route
+    gamma = spec.param("gamma")
+    ref = np.exp(-gamma * _l1_oracle(Xq, X)) @ np.asarray(V, np.float64)
+    _parity(got, ref)
+
+
+def test_cross_vpu_route_for_off_lattice_queries():
+    """Off-lattice queries keep the always-exact VPU loop: no MXU suffix
+    on the recorded route, same answer as the oracle."""
+    spec = specs.suggested_spec("laplacian", 8)
+    X = _quantized(29, 140)
+    op = PairwiseKernel(X, spec, use_pallas=False)
+    Xq = jnp.asarray(np.random.default_rng(30).normal(size=(17, 8)),
+                     jnp.float32)
+    assert op.l1_route(Xq) == "vpu_loop"
+    V = jnp.asarray(np.random.default_rng(31).normal(size=(140, 3)),
+                    jnp.float32)
+    (got,) = op.cross(Xq, (V,))
+    assert op._last_cross_l1_route == "vpu_loop"
+    assert "+mxu_signsplit" not in op._last_sweep_route
+    gamma = spec.param("gamma")
+    ref = np.exp(-gamma * _l1_oracle(Xq, X)) @ np.asarray(V, np.float64)
+    _parity(got, ref)
+
+
+def test_cross_route_is_none_for_non_l1_stats():
+    rbf = specs.suggested_spec("rbf", 8)
+    op = PairwiseKernel(_quantized(32, 100), rbf, use_pallas=False)
+    Xq = _on_lattice_queries(op.X, 7, 33)
+    assert op.l1_route(Xq) is None
+    op.cross(Xq, (jnp.ones((100, 2), jnp.float32),))
+    assert op._last_cross_l1_route is None
+    assert "+mxu_signsplit" not in op._last_sweep_route
+
+
+# ---------------------------------------------------------------------------
 # scalar-prefetch slab launches
 # ---------------------------------------------------------------------------
 
