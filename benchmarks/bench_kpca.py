@@ -1,8 +1,16 @@
-"""Paper Figures 5-10: approximate KPCA.
+"""Paper Figures 5-10: approximate KPCA — streaming-native.
 
-- misalignment (Eq. 10) of the top-k approximate eigenvectors vs exact,
-  against both c (memory) and wall-time (Figs 5/6);
+- misalignment (Eq. 10) of the top-k approximate eigenvectors against c
+  (memory) and wall-time (Figs 5/6);
 - with --knn: KPCA features + 10-NN generalization error (Figs 7-10).
+
+Every kernel access streams through the operator protocol: the bandwidth
+comes from the calibration registry (one statistic gather), C selection runs
+through the ``SelectionPolicy`` registry, the fast U through panel sweeps,
+and the *exact-eigvec reference* through randomized subspace iteration
+(``eig.streaming_subspace_eigh`` — matmat panel passes).  The n×n kernel is
+never materialized: ``full()`` is booby-trapped over this module in
+``tests/test_workloads.py``.
 """
 from __future__ import annotations
 
@@ -10,80 +18,106 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (calibrate_sigma, knn_classify, make_dataset,
                                print_table)
 from repro.core import eig, spsd
-from repro.core.kernelop import RBFKernel
+from repro.core.kernelop import PairwiseKernel
+from repro.kernels.pairwise import specs as pw_specs
+
+#: SelectionPolicy names the KPCA/spectral workloads sweep (uniform is the
+#: paper's C-selection baseline; adaptive² is the PR-5 accuracy frontier)
+SELECTIONS = ("uniform", "leverage", "uniform_adaptive2")
 
 
-def _methods(Kop, key, c, s_mults=(2, 4, 8)):
-    base = spsd.sample_C(Kop, key, c)
+def make_operator(X, sigma=None) -> PairwiseKernel:
+    """RBF operator with the registry-calibrated bandwidth (no full())."""
+    sigma = calibrate_sigma(X) if sigma is None else sigma
+    return PairwiseKernel(X, pw_specs.get_spec("rbf", sigma=float(sigma)))
+
+
+def reference_eigvecs(Kop, k: int, seed: int = 0) -> eig.EigResult:
+    """Exact top-k eigenpairs via streamed subspace iteration (the bench's
+    accuracy-vs-dense reference — 10 matmat sweeps, zero densification)."""
+    return eig.streaming_subspace_eigh(
+        Kop, k, key=jax.random.PRNGKey(seed), power_iters=8)
+
+
+def _methods(Kop, key, c: int, theta: int = 4, selections=SELECTIONS):
+    """(C, U, build-seconds) per method.
+
+    Nyström is the S = P baseline (columns gather + c×c block); each
+    ``fast <policy>`` row is Algorithm 1 with that ``SelectionPolicy``
+    choosing C and a uniform s = θc sketch for the fast U.
+    """
     out = {}
     t0 = time.perf_counter()
+    base = spsd.sample_C(Kop, key, c)
     W = Kop.block(base.P_indices, base.P_indices)
-    U = spsd.nystrom_U(W)
-    out["nystrom"] = (base.C, U, time.perf_counter() - t0)
-    for m in s_mults:
+    out["nystrom"] = (base.C, spsd.nystrom_U(W), time.perf_counter() - t0)
+    for i, sel in enumerate(selections):
         t0 = time.perf_counter()
-        ap = spsd.fast_model_from_C(Kop, base.C, jax.random.fold_in(key, m),
-                                    m * c, P_indices=base.P_indices,
-                                    s_sketch="uniform")
-        out[f"fast s={m}c"] = (ap.C, ap.U, time.perf_counter() - t0)
-    t0 = time.perf_counter()
-    proto = spsd.prototype_model(Kop, base.C, base.P_indices)
-    out["prototype"] = (proto.C, proto.U, time.perf_counter() - t0)
+        ap = spsd.fast_model(Kop, jax.random.fold_in(key, i), c=c,
+                             s=theta * c, s_sketch="uniform", selection=sel)
+        out[f"fast {sel}"] = (ap.C, ap.U, time.perf_counter() - t0)
     return out
 
 
-def run_misalignment(dataset: str, k: int = 3, cs=(16, 32, 64), seed=0):
-    X, _ = make_dataset(dataset, seed=seed)
-    sigma = calibrate_sigma(X, 0.9, k)
-    Kop = RBFKernel(X, sigma=sigma)
-    Kd = Kop.full()
-    lam, V = jnp.linalg.eigh(Kd)
-    U_true = V[:, ::-1][:, :k]
+def run_misalignment(dataset: str, k: int = 3, cs=(16, 32, 64), seed=0,
+                     n=None, selections=SELECTIONS):
+    X, _ = make_dataset(dataset, seed=seed, n=n)
+    Kop = make_operator(X)
+    U_true = reference_eigvecs(Kop, k, seed).eigenvectors
 
     rows = []
     for c in cs:
-        for name, (C, U, dt) in _methods(Kop, jax.random.PRNGKey(seed),
-                                         c).items():
+        for name, (C, U, dt) in _methods(Kop, jax.random.PRNGKey(seed), c,
+                                         selections=selections).items():
+            t0 = time.perf_counter()
             res = eig.approx_eigh(C, U, k)
+            res.eigenvectors.block_until_ready()
             mis = float(eig.misalignment(U_true, res.eigenvectors))
-            rows.append((dataset, c, name, f"{dt * 1e3:8.1f}",
-                         f"{mis:.5f}"))
+            rows.append({"dataset": dataset, "n": int(X.shape[0]), "c": c,
+                         "k": k, "method": name,
+                         "seconds": dt + time.perf_counter() - t0,
+                         "misalignment": mis})
     print_table(f"Fig 5/6: KPCA misalignment ({dataset}, k={k})",
-                ["dataset", "c", "method", "U-time ms", "misalignment"],
-                rows)
+                ["dataset", "c", "method", "time ms", "misalignment"],
+                [(r["dataset"], r["c"], r["method"],
+                  f"{r['seconds'] * 1e3:8.1f}", f"{r['misalignment']:.5f}")
+                 for r in rows])
     return rows
 
 
-def run_knn(dataset: str, k: int = 3, c: int = 48, seed=0):
-    X, y = make_dataset(dataset, seed=seed)
-    n = X.shape[0]
-    ntr = n // 2
+def run_knn(dataset: str, k: int = 3, c: int = 48, seed=0, n=None,
+            selections=SELECTIONS):
+    """KPCA features + 10-NN test error; test-point kernel columns go
+    through the serving-path ``cross`` launch (no dense distance matrix)."""
+    X, y = make_dataset(dataset, seed=seed, n=n)
+    ntr = X.shape[0] // 2
     Xtr, ytr, Xte, yte = X[:ntr], y[:ntr], X[ntr:], y[ntr:]
-    sigma = calibrate_sigma(Xtr, 0.9, k)
-    Kop = RBFKernel(Xtr, sigma=sigma)
-
-    # kernel columns for test points
-    d2 = (jnp.sum(Xte ** 2, 1)[None, :] + jnp.sum(Xtr ** 2, 1)[:, None]
-          - 2 * Xtr @ Xte.T)
-    k_test = jnp.exp(-jnp.maximum(d2, 0) / (2 * sigma ** 2))   # (ntr, nte)
+    Kop = make_operator(Xtr)
 
     rows = []
-    for name, (C, U, dt) in _methods(Kop, jax.random.PRNGKey(seed),
-                                     c).items():
+    for name, (C, U, dt) in _methods(Kop, jax.random.PRNGKey(seed), c,
+                                     selections=selections).items():
+        t0 = time.perf_counter()
         feats, eres = eig.kpca_features(C, U, k)
-        te_feats = eig.kpca_transform(eres, k_test).T           # (nte, k)
-        pred = knn_classify(np.asarray(feats), ytr, np.asarray(te_feats))
+        # K(Xte, Xtr) @ V in one rectangular cross launch, then Λ^{-1/2}
+        te_proj = Kop.cross(Xte, (eres.eigenvectors,))[0]       # (nte, k)
+        lam = np.maximum(np.asarray(eres.eigenvalues), 1e-12)
+        te_feats = np.asarray(te_proj) / np.sqrt(lam)[None, :]
+        pred = knn_classify(np.asarray(feats), ytr, te_feats)
         err = float(np.mean(pred != np.asarray(yte)))
-        rows.append((dataset, name, f"{dt * 1e3:8.1f}", f"{err:.4f}"))
+        rows.append({"dataset": dataset, "n": int(X.shape[0]), "c": c,
+                     "k": k, "method": name,
+                     "seconds": dt + time.perf_counter() - t0,
+                     "test_err": err})
     print_table(f"Fig 7-10: KPCA + 10NN classification ({dataset}, k={k}, "
-                f"c={c})", ["dataset", "method", "U-time ms", "test err"],
-                rows)
+                f"c={c})", ["dataset", "method", "time ms", "test err"],
+                [(r["dataset"], r["method"], f"{r['seconds'] * 1e3:8.1f}",
+                  f"{r['test_err']:.4f}") for r in rows])
     return rows
 
 
@@ -92,12 +126,15 @@ def main(argv=None):
     p.add_argument("--datasets", nargs="*", default=["pendigit",
                                                      "mushrooms"])
     p.add_argument("--k", type=int, default=3)
+    p.add_argument("--n", type=int, default=None,
+                   help="override dataset size (smoke shapes)")
+    p.add_argument("--cs", type=int, nargs="*", default=[16, 32, 64])
     p.add_argument("--knn", action="store_true")
     args = p.parse_args(argv)
     for ds in args.datasets:
-        run_misalignment(ds, k=args.k)
+        run_misalignment(ds, k=args.k, cs=tuple(args.cs), n=args.n)
         if args.knn:
-            run_knn(ds, k=args.k)
+            run_knn(ds, k=args.k, n=args.n)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,189 @@
+"""Downstream workload suite: the paper's applications end-to-end.
+
+One row per workload, each with an accuracy-vs-dense number and wall-clock,
+so scenario coverage is visible in the perf trajectory
+(``BENCH_<tag>.json["workloads"]``):
+
+=========  =============================  ==================================
+workload   accuracy vs dense              route
+=========  =============================  ==================================
+kpca       misalignment (Eq. 10) vs the   ``fast_model`` + SelectionPolicy,
+           streamed-exact eigvecs; 10-NN  Lemma-10 ``approx_eigh``; reference
+           test error                     via streamed subspace iteration
+spectral   NMI agreement with the dense-  degree-normalized Lemma-10 route on
+           route clustering (+NMI vs      streamed-exact degree sums d = K1
+           labels)
+krr        parity vs the dense f64 KRR    ``build_artifact`` (cached Woodbury
+           oracle                         solve) → ``serve_kernel_model``
+attention  rel err vs exact softmax       ``sketched_attention`` fast-CUR
+           attention; decode-path read    with SelectionPolicy landmarks +
+           err                            the fused landmark read kernel
+=========  =============================  ==================================
+
+All shapes are smoke-sized (CI runs this inside ``run.py --smoke`` and the
+``workload-smoke`` job); absolute wall-clock at these shapes is noise — the
+accuracy columns and their trajectory are the signal.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import bench_kpca, bench_spectral
+from repro.core.sketched_attention import (build_landmark_state,
+                                           sketched_attention)
+from repro.kernels.landmark_attention import ops as lm_ops
+from repro.kernels.pairwise import calibrate as pw_cal
+from repro.launch.serve_kernel import synth_problem
+from repro.serve.artifact import build_artifact
+from repro.serve.engine import (QueryRequest, dense_krr_oracle, parity_gap,
+                                serve_kernel_model)
+
+#: the policy each workload row reports (the PR-5 accuracy frontier)
+WORKLOAD_SELECTION = "uniform_adaptive2"
+
+
+def run_kpca(n=400, k=3, c=32, seed=0) -> dict:
+    t0 = time.perf_counter()
+    mis_rows = bench_kpca.run_misalignment(
+        "pendigit", k=k, cs=(c,), seed=seed, n=n,
+        selections=(WORKLOAD_SELECTION,))
+    knn_rows = bench_kpca.run_knn(
+        "pendigit", k=k, c=c, seed=seed, n=n,
+        selections=(WORKLOAD_SELECTION,))
+    pick = next(r for r in mis_rows
+                if r["method"] == f"fast {WORKLOAD_SELECTION}")
+    knn = next(r for r in knn_rows
+               if r["method"] == f"fast {WORKLOAD_SELECTION}")
+    return {"workload": "kpca", "n": n, "c": c, "k": k,
+            "selection": WORKLOAD_SELECTION,
+            "misalignment": pick["misalignment"],
+            "knn_test_err": knn["test_err"],
+            "knn_test_err_nystrom": next(
+                r["test_err"] for r in knn_rows if r["method"] == "nystrom"),
+            "build_seconds": round(pick["seconds"], 4),
+            "seconds": round(time.perf_counter() - t0, 3)}
+
+
+def run_spectral(n=400, k=4, c=32, seed=0) -> dict:
+    t0 = time.perf_counter()
+    rows = bench_spectral.run("pendigit", k=k, cs=(c,), seed=seed, n=n,
+                              selections=(WORKLOAD_SELECTION,))
+    pick = next(r for r in rows
+                if r["method"] == f"fast {WORKLOAD_SELECTION}")
+    return {"workload": "spectral", "n": n, "c": c, "k": k,
+            "selection": WORKLOAD_SELECTION,
+            "nmi": pick["nmi"], "nmi_dense": pick["nmi_dense"],
+            "nmi_vs_dense": pick["nmi_vs_dense"],
+            "build_seconds": round(pick["seconds"], 4),
+            "seconds": round(time.perf_counter() - t0, 3)}
+
+
+def run_krr(n=400, d=16, c=48, s=96, nq=64, alpha=1e-2, seed=0) -> dict:
+    """Streamed build → cached-Woodbury KRR heads → fused cross serving,
+    measured against the dense f64 oracle on held-out queries."""
+    X_all, y_all = synth_problem(n + nq, d, seed)
+    X, y = X_all[:n], y_all[:n]
+    Xq, yq = X_all[n:], y_all[n:]
+    spec = pw_cal.calibrate_sigma(X, "rbf")
+
+    t0 = time.perf_counter()
+    art = build_artifact(X, y, spec, c=c, s=s, alpha=alpha,
+                         selection=WORKLOAD_SELECTION,
+                         key=jax.random.PRNGKey(seed))
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    res = serve_kernel_model(art, [QueryRequest(Xq, "krr")])
+    pred = np.asarray(res[0].out)[:, 0]
+    query_s = time.perf_counter() - t0
+
+    dense = np.asarray(dense_krr_oracle(art, Xq, y))[:, 0]
+    return {"workload": "krr", "n": n, "c": c, "s": s, "nq": nq,
+            "selection": WORKLOAD_SELECTION,
+            "parity_vs_dense": parity_gap(pred, dense),
+            "rmse": float(np.sqrt(np.mean((pred - np.asarray(yq)) ** 2))),
+            "rmse_dense": float(
+                np.sqrt(np.mean((dense - np.asarray(yq)) ** 2))),
+            "build_seconds": round(build_s, 4),
+            "query_seconds": round(query_s, 4),
+            "seconds": round(build_s + query_s, 3)}
+
+
+def run_attention(S=256, D=32, c=32, theta=4, seed=0) -> dict:
+    """Fast-SPSD attention vs exact softmax attention, with SelectionPolicy
+    landmarks, plus the decode-path fused read."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (S, D)) * 0.4
+    k = jax.random.normal(ks[1], (S, D)) * 0.4
+    v = jax.random.normal(ks[2], (S, D))
+    w = jax.nn.softmax((q @ k.T) / np.sqrt(D), axis=-1)
+    exact = w @ v
+    enorm = float(jnp.linalg.norm(exact))
+
+    def rel_err(out):
+        return float(jnp.linalg.norm(out - exact)) / enorm
+
+    t0 = time.perf_counter()
+    out = sketched_attention(q, k, v, jax.random.PRNGKey(seed + 1), c=c,
+                             theta=theta, mode="fast",
+                             selection=WORKLOAD_SELECTION)
+    out.block_until_ready()
+    fast_s = time.perf_counter() - t0
+    err_ny = rel_err(sketched_attention(
+        q, k, v, jax.random.PRNGKey(seed + 1), c=c, mode="nystrom",
+        selection=WORKLOAD_SELECTION))
+
+    # decode read: prefill state once, fused kernel read for a query block
+    state = build_landmark_state(k, v, jax.random.PRNGKey(seed + 2), c=c,
+                                 theta=theta, selection=WORKLOAD_SELECTION)
+    t0 = time.perf_counter()
+    reads = lm_ops.landmark_read(q, state.k_land, state.UV, state.U1,
+                                 state.scale)
+    reads.block_until_ready()
+    read_s = time.perf_counter() - t0
+
+    return {"workload": "attention", "S": S, "D": D, "c": c, "theta": theta,
+            "selection": WORKLOAD_SELECTION,
+            "rel_err_vs_exact": rel_err(out),
+            "rel_err_nystrom": err_ny,
+            "decode_rel_err": rel_err(reads),
+            "fast_seconds": round(fast_s, 4),
+            "decode_read_seconds": round(read_s, 4),
+            "seconds": round(fast_s + read_s, 3)}
+
+
+def run(seed=0) -> list:
+    """All four workload rows at smoke shapes."""
+    return [run_kpca(seed=seed), run_spectral(seed=seed),
+            run_krr(seed=seed), run_attention(seed=seed)]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", default=None,
+                   help="write {'workloads': rows} to this path (the "
+                        "workload-smoke CI leg feeds it to compare_bench)")
+    args = p.parse_args(argv)
+    rows = run(seed=args.seed)
+    for r in rows:
+        print(json.dumps(r))
+    if args.json:
+        out_dir = os.path.dirname(args.json)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"workloads": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

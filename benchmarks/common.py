@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kernelop import RBFKernel
+from repro.kernels.pairwise import calibrate as _lib_calibrate
 
 DATASETS = {
     # name: (n, d, classes)  — sized after Table 6/7 but CPU-friendly
@@ -46,9 +47,31 @@ def eta_of(K: jnp.ndarray, k: int) -> float:
     return float(jnp.sum(ev2[:k]) / jnp.sum(ev2))
 
 
-def calibrate_sigma(X: jnp.ndarray, eta_target: float, k: int,
-                    lo=0.05, hi=20.0, iters=18) -> float:
-    """Binary search sigma so eta(K_sigma) ~ eta_target (paper §6.1)."""
+def calibrate_sigma(X: jnp.ndarray, eta_target: float = 0.9, k: int = 3,
+                    q: float = 0.5) -> float:
+    """Bandwidth via the library's per-spec calibration registry.
+
+    Delegates to ``repro.kernels.pairwise.calibrate`` (median-heuristic
+    quantile of the streamed pairwise statistic — one n×m gather, no
+    ``full()``), so benches and serving agree on σ.  ``eta_target``/``k``
+    are accepted for call-site back-compat with the old spectral-mass
+    binary search, which survives as :func:`calibrate_sigma_eta` (the
+    parity test's oracle); they do not affect the quantile rule.
+    """
+    del eta_target, k
+    spec = _lib_calibrate.calibrate_sigma(jnp.asarray(X, jnp.float32),
+                                          "rbf", q=q)
+    return float(spec.param("sigma"))
+
+
+def calibrate_sigma_eta(X: jnp.ndarray, eta_target: float, k: int,
+                        lo=0.05, hi=20.0, iters=18) -> float:
+    """Binary search sigma so eta(K_sigma) ~ eta_target (paper §6.1).
+
+    The pre-registry rule — kept as the oracle for the calibration parity
+    test; it densifies an 800-point sub-kernel, so benches no longer call
+    it.
+    """
     Xs = X[: min(X.shape[0], 800)]
     for _ in range(iters):
         mid = (lo + hi) / 2

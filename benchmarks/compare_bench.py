@@ -125,6 +125,27 @@ def compare(fresh: dict, base: dict, tol_speedup: float = 0.5,
                 f"roofline {key[0]}/{key[1]}: l1 route "
                 f"{b.get('l1_route')} -> {f.get('l1_route')}")
 
+    # -- workloads: advisory-first (downstream accuracy-vs-dense per
+    # workload — misalignment / NMI / parity / attention rel err; promote to
+    # hard gates once the trajectory has history) ---------------------------
+    _WORKLOAD_ACC = ("misalignment", "knn_test_err", "nmi", "nmi_vs_dense",
+                     "parity_vs_dense", "rmse", "rel_err_vs_exact",
+                     "decode_rel_err")
+    f_w = _index(fresh.get("workloads", []), "workload")
+    b_w = _index(base.get("workloads", []), "workload")
+    for name in sorted(set(f_w) & set(b_w)):
+        f, b = f_w[name], b_w[name]
+        for m in _WORKLOAD_ACC:
+            if m not in f or m not in b:
+                continue
+            line = f"workloads {name}: {m} {b[m]:.4g} -> {f[m]:.4g}"
+            # NMI is a higher-is-better score; everything else is an error
+            worse = (f[m] < b[m] * (1.0 - tol_err) - 1e-6
+                     if m.startswith("nmi") else f[m] > err_bound(b[m]))
+            advisories.append(line + (" [beyond tolerance]" if worse else ""))
+    for name in sorted(set(b_w) - set(f_w)):
+        advisories.append(f"workloads {name}: row dropped from fresh payload")
+
     # -- advisory-only sections ---------------------------------------------
     f_serve = _index(fresh.get("serve", []), "clients")
     b_serve = _index(base.get("serve", []), "clients")

@@ -14,7 +14,7 @@ import sys
 import time
 
 SUITES = ["spsd_error", "spsd_error_adaptive", "kpca", "spectral", "cur",
-          "time", "landmark", "ablations", "kernels", "serve"]
+          "time", "landmark", "ablations", "kernels", "serve", "workloads"]
 
 SMOKE_JSON = os.path.join("results", "BENCH_smoke.json")
 
@@ -57,7 +57,7 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
     import jax
     t0 = time.time()
     from benchmarks import bench_cur, bench_kernels, bench_serve, \
-        bench_spsd_error, bench_time
+        bench_spsd_error, bench_time, bench_workloads
     steps = {}
 
     def step(name, fn):
@@ -88,6 +88,7 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
     serve_append = step(
         "serve_append",
         lambda: bench_serve.run_append(n=800, batches=4, batch_rows=32))
+    workloads = step("workloads", lambda: bench_workloads.run())
 
     # achieved-vs-roofline per launch, pulled out of the kernel rows so the
     # perf trajectory is one flat section (and one CI artifact) per PR
@@ -120,6 +121,7 @@ def smoke(out: str = SMOKE_JSON, tag: str = None) -> int:
         "cur_streaming_selection": cur_selection,
         "serve": serve,
         "serve_append": serve_append,
+        "workloads": workloads,
     }
     out_dir = os.path.dirname(out)
     if out_dir:
@@ -190,6 +192,9 @@ def main(argv=None):
     if "serve" in picked:
         from benchmarks import bench_serve
         bench_serve.main([])
+    if "workloads" in picked:
+        from benchmarks import bench_workloads
+        bench_workloads.main([])
     print(f"\nbenchmarks completed in {time.time() - t0:.1f}s")
     return 0
 

@@ -24,20 +24,24 @@ prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 96), 0,
                              base.vocab_size, dtype=jnp.int32)
 
 outs = {}
-for landmark in (False, True):
-    cfg = dataclasses.replace(base, use_landmark_decode=landmark,
-                              landmark_c=48, landmark_theta=4)
+for mode, opts in (("exact KV", dict(use_landmark_decode=False)),
+                   ("landmark strided", dict(use_landmark_decode=True,
+                                             landmark_selection="strided")),
+                   ("landmark adaptive", dict(
+                       use_landmark_decode=True,
+                       landmark_selection="uniform_adaptive2"))):
+    cfg = dataclasses.replace(base, landmark_c=48, landmark_theta=4, **opts)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     t0 = time.time()
     out = generate(model, params, prompts, gen=24, key=jax.random.PRNGKey(2))
     out.block_until_ready()
-    outs[landmark] = np.asarray(out)
-    mode = "landmark(fast-SPSD)" if landmark else "exact KV"
+    outs[mode] = np.asarray(out)
     print(f"{mode:22s}: generated {out.shape} in {time.time() - t0:5.1f}s")
 
-agree = float(np.mean(outs[False] == outs[True]))
-print(f"\ntoken agreement exact-vs-landmark: {100 * agree:.1f}% "
-      f"(c=48 landmarks over 96-token context)")
+for mode in ("landmark strided", "landmark adaptive"):
+    agree = float(np.mean(outs["exact KV"] == outs[mode]))
+    print(f"token agreement exact vs {mode}: {100 * agree:.1f}% "
+          f"(c=48 landmarks over 96-token context)")
 print("landmark state per layer: O(c*(2d+1)) floats vs KV cache O(S*2d) — "
       "independent of context length")

@@ -43,6 +43,7 @@ class ModelConfig:
     landmark_c: int = 256
     landmark_theta: int = 4
     use_landmark_decode: bool = False     # global layers use LandmarkState cache
+    landmark_selection: str = "strided"   # or a SelectionPolicy registry name
 
     # --- mlp ---
     mlp_variant: str = "swiglu"           # swiglu | geglu | relu2

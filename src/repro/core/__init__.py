@@ -43,6 +43,8 @@ from repro.core.eig import (EigResult, approx_eigh, kpca_features,
                             woodbury_solve)
 from repro.core.adaptive import uniform_adaptive2_indices
 from repro.core.sketched_attention import (LandmarkState, build_landmark_state,
-                                           landmark_decode, sketched_attention)
+                                           landmark_decode, select_landmarks,
+                                           signed_den_floor,
+                                           sketched_attention)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

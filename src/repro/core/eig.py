@@ -97,15 +97,56 @@ def misalignment(U_true: jnp.ndarray, V_approx: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(d * d) / k
 
 
+def streaming_subspace_eigh(K, k: int, key=None, oversample: int = 8,
+                            power_iters: int = 6, block_size=None,
+                            mesh=None) -> EigResult:
+    """Top-k eigenpairs of an SPSD *operator* by randomized subspace
+    iteration (Halko–Martinsson–Tropp) — the exact-eigvec reference of the
+    workload benches.
+
+    Every application of K streams through ``matmat`` panel sweeps; the
+    n×n kernel is never materialized.  ``power_iters+2`` sweeps total
+    (probe, re-orthogonalized power steps, Rayleigh–Ritz), each a full
+    multi-RHS pass over the operator.  Complements
+    ``spsd.streaming_topk_eigvals`` (values only) with the eigenvector
+    variant kernel-PCA misalignment needs.
+    """
+    from repro.core import spsd as spsd_lib
+    from repro.core.kernelop import as_operator
+    Kop = as_operator(K)
+    if key is None:
+        key = spsd_lib.default_probe_key()
+    q = min(Kop.n, k + oversample)
+    Y = Kop.matmat(jax.random.normal(key, (Kop.n, q), jnp.float32),
+                   block_size=block_size, mesh=mesh)
+    for _ in range(power_iters):
+        Qb, _ = jnp.linalg.qr(Y)
+        Y = Kop.matmat(Qb, block_size=block_size, mesh=mesh)
+    Qb, _ = jnp.linalg.qr(Y)
+    B = Qb.T @ Kop.matmat(Qb, block_size=block_size, mesh=mesh)
+    B = 0.5 * (B + B.T)
+    lam, W = jnp.linalg.eigh(B)                      # ascending
+    lam = lam[::-1]
+    W = W[:, ::-1]
+    return EigResult(eigenvalues=lam[:k], eigenvectors=(Qb @ W)[:, :k])
+
+
 def spectral_embedding(C: jnp.ndarray, U: jnp.ndarray, k: int,
-                       eps: float = 1e-9) -> jnp.ndarray:
+                       eps: float = 1e-9,
+                       degrees: jnp.ndarray | None = None) -> jnp.ndarray:
     """§6.4: normalized-Laplacian top-k eigenvectors from CUC^T ≈ K.
 
     d = CUC^T 1;  L = I − D^{-1/2} CUC^T D^{-1/2}; bottom-k of L = top-k of
     (D^{-1/2}C) U (D^{-1/2}C)^T — computed via Lemma 10. Rows are normalized.
+
+    ``degrees`` substitutes *exact* degree sums d = K1 for the model-implied
+    ones (one streamed ``matmat`` panel sweep on the kernel operator) — the
+    degree-normalized route the spectral workload bench uses, so the
+    normalization does not inherit the approximation's error.
     """
     ones = jnp.ones((C.shape[0], 1), C.dtype)
-    d = (C @ (U @ (C.T @ ones)))[:, 0]
+    d = ((C @ (U @ (C.T @ ones)))[:, 0] if degrees is None
+         else degrees.astype(C.dtype))
     dinv = 1.0 / jnp.sqrt(jnp.maximum(d, eps))
     Cn = C * dinv[:, None]
     eig = approx_eigh(Cn, U, k)

@@ -40,7 +40,10 @@ def _landmark_kernel(q_ref, kl_ref, uv_ref, u1_ref, off_ref, o_ref, *,
     cvec = jnp.exp(logits)                                  # (bq, c)
     num = jax.lax.dot(cvec, uv, preferred_element_type=jnp.float32)
     den = jax.lax.dot(cvec, u1, preferred_element_type=jnp.float32)
-    o_ref[...] = (num / jnp.maximum(den, eps)).astype(o_ref.dtype)
+    # sign-preserving floor: an indefinite fast-U can push den negative, and
+    # a plain maximum(den, eps) would flip the sign of the whole output row
+    den = jnp.where(den < 0.0, -1.0, 1.0) * jnp.maximum(jnp.abs(den), eps)
+    o_ref[...] = (num / den).astype(o_ref.dtype)
 
 
 def landmark_read_padded(Q: jnp.ndarray, k_land: jnp.ndarray,

@@ -3,8 +3,12 @@
 Given the context-side factors of the paper's fast model
 (k_land (c,d), UV = U(R̂V) (c,dv), U1 = U(R̂1) (c,)), the per-query read is
 
-    cvec = exp(q @ k_land^T / sqrt(d) - offset)      (m, c)
-    out  = (cvec @ UV) / max(cvec @ U1, eps)         (m, dv)
+    cvec = exp(q @ k_land^T / sqrt(d) - offset)        (m, c)
+    out  = (cvec @ UV) / sgnfloor(cvec @ U1, eps)      (m, dv)
+
+where ``sgnfloor`` floors |den| at eps with the sign preserved (an
+indefinite fast-U can push the normalizer negative; clamping to +eps would
+flip the output sign).
 """
 from __future__ import annotations
 # repro: allow-file(RPR003: dense f32 oracle — operands are cast to f32 before every contraction)
@@ -21,5 +25,6 @@ def landmark_read(Q: jnp.ndarray, k_land: jnp.ndarray, UV: jnp.ndarray,
               ) * inv_sqrt_d - offset
     cvec = jnp.exp(logits)
     num = cvec @ UV.astype(jnp.float32)
-    den = jnp.maximum(cvec @ U1.astype(jnp.float32), eps)
+    den = cvec @ U1.astype(jnp.float32)
+    den = jnp.where(den < 0.0, -1.0, 1.0) * jnp.maximum(jnp.abs(den), eps)
     return (num / den[:, None]).astype(Q.dtype)

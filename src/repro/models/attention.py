@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.sketched_attention import signed_den_floor
 from repro.distributed import sharding as shd
 from repro.models import layers as L
 
@@ -476,7 +477,7 @@ def _landmark_decode(params: dict, cfg: ModelConfig, x: jnp.ndarray,
     num = jnp.einsum("bkgc,bkcv->bkgv", cvec,
                      cache["uv"].astype(jnp.float32))
     den = jnp.einsum("bkgc,bkc->bkg", cvec, cache["u1"])
-    out = num / jnp.maximum(den, 1e-6)[..., None]
+    out = num / signed_den_floor(den)[..., None]
     out = out.reshape(B, 1, H, out.shape[-1]).astype(dt)
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
 
@@ -489,8 +490,9 @@ def build_landmark_cache(params: dict, cfg: ModelConfig, k: jnp.ndarray,
     from repro.core.sketched_attention import build_landmark_state
 
     def one(kh, vh, kk):
-        st = build_landmark_state(kh, vh, kk, c=cfg.landmark_c,
-                                  theta=cfg.landmark_theta)
+        st = build_landmark_state(
+            kh, vh, kk, c=cfg.landmark_c, theta=cfg.landmark_theta,
+            selection=getattr(cfg, "landmark_selection", "strided"))
         return st.k_land, st.UV, st.U1, st.scale
 
     B, S, KV, D = k.shape

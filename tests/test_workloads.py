@@ -1,0 +1,163 @@
+"""Downstream workload suite: streaming guarantees, approx_eigh edge cases,
+calibration parity, and the bench-row contract.
+
+The tentpole invariant: ``bench_kpca`` / ``bench_spectral`` (and hence the
+workload rows built on them) run with ZERO ``full()`` calls on the kernel
+operator — booby-trapped here over the whole bench entry points.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eig
+from repro.core.kernelop import PairwiseKernel
+
+# ---------------------------------------------------------------------------
+# zero-full() booby traps over the whole bench entry points
+# ---------------------------------------------------------------------------
+
+
+def _boom(self):
+    raise AssertionError("workload bench materialized the n×n kernel")
+
+
+def test_bench_kpca_never_calls_full(monkeypatch):
+    from benchmarks import bench_kpca
+    monkeypatch.setattr(PairwiseKernel, "full", _boom)
+    rows = bench_kpca.run_misalignment("pendigit", k=3, cs=(16,), n=160,
+                                       selections=("uniform",))
+    assert rows and all(np.isfinite(r["misalignment"]) for r in rows)
+    knn = bench_kpca.run_knn("pendigit", k=3, c=16, n=160,
+                             selections=("uniform",))
+    assert knn and all(np.isfinite(r["test_err"]) for r in knn)
+
+
+def test_bench_spectral_never_calls_full(monkeypatch):
+    from benchmarks import bench_spectral
+    monkeypatch.setattr(PairwiseKernel, "full", _boom)
+    rows = bench_spectral.run("pendigit", k=4, cs=(16,), n=160,
+                              selections=("uniform",))
+    assert rows
+    for r in rows:
+        assert np.isfinite(r["nmi"]) and np.isfinite(r["nmi_vs_dense"])
+
+
+def test_streaming_subspace_eigh_matches_dense():
+    X = jax.random.normal(jax.random.PRNGKey(0), (220, 8))
+    from repro.kernels.pairwise import specs as pw_specs
+    Kop = PairwiseKernel(X, pw_specs.get_spec("rbf", sigma=2.0))
+    ref = eig.streaming_subspace_eigh(Kop, 4, power_iters=8)
+    lam, V = jnp.linalg.eigh(Kop.full())
+    np.testing.assert_allclose(np.asarray(ref.eigenvalues),
+                               np.asarray(lam[::-1][:4]), rtol=1e-4)
+    mis = float(eig.misalignment(V[:, ::-1][:, :4], ref.eigenvectors))
+    assert mis < 1e-6, mis
+
+
+# ---------------------------------------------------------------------------
+# approx_eigh edge cases the workloads hit
+# ---------------------------------------------------------------------------
+
+
+def test_approx_eigh_rank_deficient_C():
+    """c greater than the numerical rank of C: eigenvectors must stay
+    finite and the sqrt(lam) feature map NaN-free."""
+    key = jax.random.PRNGKey(1)
+    n, r, c = 120, 5, 24                       # C has rank 5 << c = 24
+    A = jax.random.normal(key, (n, r))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (r, c))
+    C = A @ B
+    U = jnp.eye(c)
+    res = eig.approx_eigh(C, U, k=8)
+    assert np.all(np.isfinite(np.asarray(res.eigenvalues)))
+    assert np.all(np.isfinite(np.asarray(res.eigenvectors)))
+    feats, _ = eig.kpca_features(C, U, k=8)
+    assert np.all(np.isfinite(np.asarray(feats))), "sqrt(lam) features NaN"
+
+
+def test_approx_eigh_negative_trailing_eigenvalues():
+    """Indefinite U (the fast-CUR U can be): trailing eigenvalues of M go
+    negative; downstream feature maps must clamp, not NaN."""
+    key = jax.random.PRNGKey(2)
+    n, c = 100, 12
+    C = jax.random.normal(key, (n, c))
+    neg = jnp.concatenate([jnp.ones(6), -0.5 * jnp.ones(6)])
+    U = jnp.diag(neg)                          # explicitly indefinite
+    res = eig.approx_eigh(C, U, k=c)
+    assert float(res.eigenvalues[-1]) < 0.0, "test premise: M is indefinite"
+    assert np.all(np.isfinite(np.asarray(res.eigenvectors)))
+    feats, eres = eig.kpca_features(C, U, k=c)
+    assert np.all(np.isfinite(np.asarray(feats))), "sqrt(-lam) leaked a NaN"
+    # transform path (Λ^{-1/2}) must also stay finite on a test column
+    k_x = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (n, 2)))
+    te = eig.kpca_transform(eres, k_x)
+    assert np.all(np.isfinite(np.asarray(te)))
+
+
+def test_spectral_embedding_streamed_degrees():
+    """degrees= must override the model-implied degree vector (exact
+    streamed d = K1) and produce unit row norms."""
+    X = jax.random.normal(jax.random.PRNGKey(3), (150, 6))
+    from repro.core import spsd
+    from repro.kernels.pairwise import specs as pw_specs
+    Kop = PairwiseKernel(X, pw_specs.get_spec("rbf", sigma=1.5))
+    ap = spsd.fast_model(Kop, jax.random.PRNGKey(4), c=24, s=48,
+                         s_sketch="uniform")
+    deg = Kop.matmat(jnp.ones((150, 1), jnp.float32))[:, 0]
+    V = eig.spectral_embedding(ap.C, ap.U, 4, degrees=deg)
+    assert np.all(np.isfinite(np.asarray(V)))
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(V), axis=1), 1.0,
+                               atol=1e-4)
+    # and it differs from the model-implied-degree route in general
+    V0 = eig.spectral_embedding(ap.C, ap.U, 4)
+    assert not np.allclose(np.asarray(V), np.asarray(V0), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# calibration dedupe: bench rule == library registry rule
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_sigma_delegates_to_registry():
+    from benchmarks import common
+    from repro.kernels.pairwise import calibrate as pw_cal
+    X, _ = common.make_dataset("letters", seed=0, n=400)
+    got = common.calibrate_sigma(X)
+    spec = pw_cal.calibrate_sigma(jnp.asarray(X, jnp.float32), "rbf")
+    assert got == pytest.approx(float(spec.param("sigma")), rel=1e-6)
+
+
+def test_calibrate_sigma_parity_with_eta_rule():
+    """The registry quantile rule lands in the same bandwidth regime as the
+    old spectral-mass binary search at the smoke shape (same order of
+    magnitude — the benches' accuracy numbers stay comparable)."""
+    from benchmarks import common
+    X, _ = common.make_dataset("letters", seed=0, n=400)
+    s_new = common.calibrate_sigma(X)
+    s_old = common.calibrate_sigma_eta(X, 0.9, 3)
+    assert 0.4 < s_new / s_old < 2.5, (s_new, s_old)
+
+
+# ---------------------------------------------------------------------------
+# the bench-row contract: every workload emits accuracy-vs-dense + wall-clock
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_workload_rows_have_accuracy_and_wallclock():
+    from benchmarks import bench_workloads
+    rows = bench_workloads.run(seed=0)
+    assert [r["workload"] for r in rows] == ["kpca", "spectral", "krr",
+                                             "attention"]
+    acc_key = {"kpca": "misalignment", "spectral": "nmi_vs_dense",
+               "krr": "parity_vs_dense", "attention": "rel_err_vs_exact"}
+    for r in rows:
+        assert np.isfinite(r[acc_key[r["workload"]]]), r
+        assert r["seconds"] > 0.0, r
+    # accuracy sanity at the smoke shapes
+    by = {r["workload"]: r for r in rows}
+    assert by["kpca"]["misalignment"] < 0.5
+    assert by["spectral"]["nmi_vs_dense"] > 0.2
+    assert by["krr"]["parity_vs_dense"] < 1e-4
+    assert by["attention"]["rel_err_vs_exact"] < 0.35
